@@ -1,0 +1,36 @@
+"""Shared benchmark helpers: timing, CSV emission, standard test graphs."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import bipartite_from_numpy
+from repro.data import synth
+
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time (us) of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def bench_graph(name: str = "movielens-10m", edges: int = 20000, seed: int = 0):
+    data = synth.scaled(name, edges, seed=seed)
+    g = bipartite_from_numpy(data.user, data.item, data.n_users, data.n_items)
+    return data, g

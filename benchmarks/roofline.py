@@ -1,0 +1,49 @@
+"""§Roofline: aggregate the dry-run records into the per-cell table.
+
+Reads results/dryrun/*.json (produced by `python -m repro.launch.dryrun
+--all`) and prints the three roofline terms, dominant bottleneck, MFU at
+the roofline bound, and the model-FLOPs/HLO-FLOPs useful ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load_records(d: str = DRYRUN_DIR):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run():
+    recs = load_records()
+    if not recs:
+        emit("roofline/no_dryrun_records", 0.0,
+             "run: python -m repro.launch.dryrun --all")
+        return {}
+    rows = {}
+    for r in recs:
+        roof = r["roofline"]
+        cell = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        bound_s = max(roof["compute_s"], roof["memory_s"],
+                      roof["collective_s"])
+        mfu_at_bound = (roof["model_flops"]
+                        / (bound_s * r["chips"] * 197e12 + 1e-30))
+        rows[cell] = (roof, mfu_at_bound, r)
+        emit(f"roofline/{cell}", 0.0,
+             f"c={roof['compute_s']:.4f}s m={roof['memory_s']:.4f}s "
+             f"coll={roof['collective_s']:.4f}s bound={roof['bottleneck']} "
+             f"mfu_bound={mfu_at_bound*100:.1f}% "
+             f"fits={r['fits_hbm']} peak={r['peak_bytes_per_dev']/2**30:.2f}GiB")
+    n_fit = sum(1 for _, _, r in rows.values() if r["fits_hbm"])
+    emit("roofline/cells_total", 0.0, str(len(rows)))
+    emit("roofline/cells_fit_hbm", 0.0, str(n_fit))
+    return rows

@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+``python -m benchmarks.run [--only fig5,table6] [--fast]``
+prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+ALL = [
+    "fig5_dataflow_opts",
+    "fig6_breakdown",
+    "fig7_tier_bandwidth",
+    "fig8_kernel_tiers",
+    "fig10_placement",
+    "fig12_large_batch",
+    "table3_accuracy",
+    "table4_sampling",
+    "table5_memory_model",
+    "table6_fullgraph_vs_subgraph",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else ALL
+    failures = []
+    for name in names:
+        mod_name = next((m for m in ALL if m.startswith(name)), name)
+        print(f"# === {mod_name} ===", flush=True)
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            mod.run()
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(mod_name)
+        print(f"# {mod_name} done in {time.perf_counter()-t0:.1f}s",
+              flush=True)
+    if failures:
+        print(f"# FAILED: {failures}")
+        sys.exit(1)
+    print("# all benchmarks OK")
+
+
+if __name__ == "__main__":
+    main()

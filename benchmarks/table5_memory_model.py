@@ -1,0 +1,37 @@
+"""Paper Table 5: maximum batch size allowed by memory capacity.
+
+Paper: DistDGL max aggregate batch collapses exponentially with depth
+(24K @1L-128E -> 384 @2L -> OOM @3L without sampling), while full-graph
+training is depth-linear.  We evaluate the same analytic memory model for
+the paper's cluster (2304 GB) and for TPU meshes, plus the full-graph
+footprint from the planner profiles (paper §2.1 ~500 GB check is in
+tests/test_core.py).
+"""
+from benchmarks.common import emit
+from repro.core.tiered_memory import gnn_recsys_profiles
+from repro.dist.subgraph import max_subgraph_batch
+
+
+def run():
+    mem = 2304e9  # paper cluster DRAM
+    avg_degree = 566  # m-x25: 250M edges / 441K vertices
+    for layers in (1, 2, 3):
+        for embed in (128, 256):
+            no_samp = max_subgraph_batch(1.0, embed, layers, mem, None,
+                                         avg_degree)
+            samp = max_subgraph_batch(1.0, embed, layers, mem, 100,
+                                      avg_degree)
+            emit(f"table5/subgraph_maxbatch_{layers}L_{embed}E", 0.0,
+                 f"nosamp={no_samp} samp100={samp}")
+    # full-graph footprint is depth-LINEAR (the paper's §2.1 model)
+    for layers in (1, 2, 3):
+        prof = gnn_recsys_profiles(349_000, 53_000, 250_000_000, 128, layers)
+        gb = sum(p.nbytes for p in prof) / 1e9
+        emit(f"table5/fullgraph_footprint_{layers}L_128E_GB", 0.0,
+             f"{gb:.0f}")
+    # TPU pod capacity: 256 x 16 GiB HBM + host tier
+    emit("table5/tpu_pod_hbm_GB", 0.0, f"{256*16}")
+    emit("table5/note", 0.0,
+         "full-graph m-x25 3L fits one pod's aggregate HBM; subgraph "
+         "training without sampling cannot run 3L at ANY batch (paper '/')")
+    return {}

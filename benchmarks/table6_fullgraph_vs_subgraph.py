@@ -1,0 +1,80 @@
+"""Paper Table 6 + Fig 14: single-machine full-graph vs distributed
+subgraph training.
+
+Paper: full-graph time grows ~linearly with depth; DistDGL grows
+exponentially (1L: 0.07-1.4x of full-graph; 2L w/o sampling: 43-356x
+slower; 3L even WITH sampling: 32-85x slower).  We run both paths on the
+same CPU-scaled graph (LightGCN) and measure time per 150-edge batch
+equivalent, plus the Fig 14 breakdown (subgraph build share).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_graph, emit
+from repro.core import bpr, lightgcn
+from repro.dist.subgraph import SubgraphTrainer
+
+
+def run():
+    data, g = bench_graph(edges=12000)
+    params = lightgcn.init_params(jax.random.PRNGKey(0), data.n_users,
+                                  data.n_items, 32)
+    x_all = jnp.concatenate([params["user_embed"], params["item_embed"]])
+    rng = np.random.default_rng(0)
+
+    results = {}
+    for layers in (1, 2, 3):
+        # full-graph step (batch only affects the BPR loss slice)
+        @jax.jit
+        def full_step(params):
+            u, i, n = [jnp.asarray(a) for a in bpr.sample_bpr_batch(
+                rng, data.user, data.item, data.n_items, 512)]
+
+            def loss_fn(p):
+                ue, ie = lightgcn.forward(p, g, n_layers=layers)
+                return bpr.bpr_loss(ue, ie, u, i, n)
+            return jax.grad(loss_fn)(params)
+
+        jax.block_until_ready(full_step(params))
+        t0 = time.perf_counter()
+        jax.block_until_ready(full_step(params))
+        t_full = time.perf_counter() - t0
+
+        # subgraph step (DistDGL-like, 2 simulated workers)
+        src = np.concatenate([data.user, data.item + data.n_users])
+        dst = np.concatenate([data.item + data.n_users, data.user])
+        tr = SubgraphTrainer(src, dst, data.n_users + data.n_items,
+                             n_layers=layers, fanout=10, n_workers=2)
+        seeds = rng.integers(0, data.n_users, 512).astype(np.int32)
+
+        def loss_fn(emb, seed_ids):
+            return jnp.mean(emb ** 2)
+
+        _, stats = tr.step(seeds, x_all, loss_fn)   # warmup/compile
+        _, stats = tr.step(seeds, x_all, loss_fn)
+        t_sub = stats.sample_s + stats.forward_s + stats.backward_s
+        results[layers] = (t_full, t_sub, stats)
+        emit(f"table6/fullgraph_{layers}L_ms", t_full * 1e3)
+        emit(f"table6/subgraph_{layers}L_ms", t_sub * 1e3,
+             f"sample={stats.sample_s*1e3:.0f}ms "
+             f"expanded={stats.expanded_vertices}")
+        emit(f"table6/speedup_{layers}L", 0.0, f"{t_sub/t_full:.2f}x")
+
+    # paper's scaling claims
+    full_growth = results[3][0] / results[1][0]
+    sub_growth = results[3][1] / results[1][1]
+    emit("table6/fullgraph_depth_growth_1to3L", 0.0, f"{full_growth:.1f}x "
+         "(paper: ~linear, ~2.9x)")
+    emit("table6/subgraph_depth_growth_1to3L", 0.0, f"{sub_growth:.1f}x "
+         "(paper: exponential)")
+    # Fig 14: build share of subgraph step
+    s = results[3][2]
+    share = s.sample_s / (s.sample_s + s.forward_s + s.backward_s)
+    emit("fig14/subgraph_build_share_3L", 0.0, f"{share*100:.0f}% "
+         "(paper: 16-32%)")
+    # redundancy across batches (paper Fig 2)
+    emit("fig14/subgraph_redundancy", 0.0, f"{tr.redundancy():.2f}x")
+    return results

@@ -1,0 +1,60 @@
+"""The paper's headline experiment as a runnable example: single-machine
+full-graph training vs DistDGL-style subgraph training, depth 1-3.
+
+Run:  PYTHONPATH=src python examples/fullgraph_vs_subgraph.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bpr, lightgcn
+from repro.core.graph import bipartite_from_numpy
+from repro.data import synth
+from repro.dist.subgraph import SubgraphTrainer
+
+
+def main():
+    data = synth.scaled("gowalla", 10000, seed=0)
+    g = bipartite_from_numpy(data.user, data.item, data.n_users, data.n_items)
+    params = lightgcn.init_params(jax.random.PRNGKey(0), data.n_users,
+                                  data.n_items, 32)
+    x_all = jnp.concatenate([params["user_embed"], params["item_embed"]])
+    rng = np.random.default_rng(0)
+
+    print(f"{'layers':>7} {'full-graph':>12} {'subgraph':>12} "
+          f"{'build%':>7} {'expanded':>9}")
+    for layers in (1, 2, 3):
+        @jax.jit
+        def full_step(params):
+            u, i, n = [jnp.asarray(a) for a in bpr.sample_bpr_batch(
+                rng, data.user, data.item, data.n_items, 256)]
+
+            def loss_fn(p):
+                ue, ie = lightgcn.forward(p, g, n_layers=layers)
+                return bpr.bpr_loss(ue, ie, u, i, n)
+            return jax.grad(loss_fn)(params)
+
+        jax.block_until_ready(full_step(params))
+        t0 = time.perf_counter()
+        jax.block_until_ready(full_step(params))
+        t_full = time.perf_counter() - t0
+
+        src = np.concatenate([data.user, data.item + data.n_users])
+        dst = np.concatenate([data.item + data.n_users, data.user])
+        tr = SubgraphTrainer(src, dst, data.n_users + data.n_items,
+                             n_layers=layers, fanout=10, n_workers=2)
+        seeds = rng.integers(0, data.n_users, 256).astype(np.int32)
+        tr.step(seeds, x_all, lambda e, s: jnp.mean(e ** 2))  # compile
+        _, st = tr.step(seeds, x_all, lambda e, s: jnp.mean(e ** 2))
+        t_sub = st.sample_s + st.forward_s + st.backward_s
+        build = st.sample_s / t_sub * 100
+        print(f"{layers:>7} {t_full*1e3:>10.1f}ms {t_sub*1e3:>10.1f}ms "
+              f"{build:>6.0f}% {st.expanded_vertices:>9}")
+    print("\npaper: full-graph wins at depth>=2 (43-356x on real clusters); "
+          "subgraph expansion grows exponentially with depth")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Static-shape graph containers.
+
+Everything is COO-first (edge lists) because JAX sparse support is
+BCOO-only and message passing maps onto gather + segment-reduce.  All
+arrays carry *static* shapes: graphs are padded to a fixed edge budget so
+jit traces once per (|V|, |E|) bucket.
+
+A bipartite user-item graph is stored with users and items in disjoint id
+ranges ([0, n_users) and [n_users, n_users + n_items)) so the same kernels
+serve bipartite recsys graphs and general graphs (GCN).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """COO graph with per-edge validity mask (for padding).
+
+    src/dst: int32[E_pad] edge endpoints.
+    edge_mask: bool[E_pad], False on padded edges.
+    n_nodes / n_edges: static python ints (aux data, not traced).
+    """
+
+    src: jax.Array
+    dst: jax.Array
+    edge_mask: jax.Array
+    n_nodes: int = dataclasses.field(metadata=dict(static=True))
+    n_edges: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def e_pad(self) -> int:
+        return self.src.shape[0]
+
+    def reverse(self) -> "Graph":
+        return Graph(self.dst, self.src, self.edge_mask, self.n_nodes, self.n_edges)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BipartiteGraph:
+    """User-item interaction graph.
+
+    Edges are stored once, (user, item) with item ids in [0, n_items).
+    ``as_homogeneous`` re-bases items to [n_users, n_users+n_items) and
+    emits both edge directions, which is what NGCF/LightGCN propagate on.
+    """
+
+    user: jax.Array  # int32[E_pad]
+    item: jax.Array  # int32[E_pad]
+    edge_mask: jax.Array
+    n_users: int = dataclasses.field(metadata=dict(static=True))
+    n_items: int = dataclasses.field(metadata=dict(static=True))
+    n_edges: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def e_pad(self) -> int:
+        return self.user.shape[0]
+
+    @property
+    def n_nodes(self) -> int:
+        return self.n_users + self.n_items
+
+    def as_homogeneous(self) -> Graph:
+        src = jnp.concatenate([self.user, self.item + self.n_users])
+        dst = jnp.concatenate([self.item + self.n_users, self.user])
+        mask = jnp.concatenate([self.edge_mask, self.edge_mask])
+        return Graph(src, dst, mask, self.n_nodes, 2 * self.n_edges)
+
+
+def pad_edges(src: np.ndarray, dst: np.ndarray, e_pad: int):
+    """Pad (src, dst) to e_pad entries; padded edges point at node 0 and
+    are masked out."""
+    e = src.shape[0]
+    if e > e_pad:
+        raise ValueError(f"{e} edges exceed pad budget {e_pad}")
+    mask = np.zeros(e_pad, dtype=bool)
+    mask[:e] = True
+    out_src = np.zeros(e_pad, dtype=np.int32)
+    out_dst = np.zeros(e_pad, dtype=np.int32)
+    out_src[:e] = src
+    out_dst[:e] = dst
+    return out_src, out_dst, mask
+
+
+def from_numpy(src: np.ndarray, dst: np.ndarray, n_nodes: int,
+               e_pad: int | None = None) -> Graph:
+    e_pad = e_pad or len(src)
+    s, d, m = pad_edges(np.asarray(src), np.asarray(dst), e_pad)
+    return Graph(jnp.asarray(s), jnp.asarray(d), jnp.asarray(m), int(n_nodes), int(len(src)))
+
+
+def bipartite_from_numpy(user: np.ndarray, item: np.ndarray, n_users: int,
+                         n_items: int, e_pad: int | None = None) -> BipartiteGraph:
+    e_pad = e_pad or len(user)
+    u, i, m = pad_edges(np.asarray(user), np.asarray(item), e_pad)
+    return BipartiteGraph(jnp.asarray(u), jnp.asarray(i), jnp.asarray(m),
+                          int(n_users), int(n_items), int(len(user)))
+
+
+@partial(jax.jit, static_argnames=("n_nodes",))
+def degrees(src: jax.Array, edge_mask: jax.Array, n_nodes: int) -> jax.Array:
+    """Out-degree per node (or in-degree if called with dst)."""
+    ones = edge_mask.astype(jnp.float32)
+    return jax.ops.segment_sum(ones, src, num_segments=n_nodes)
+
+
+def sym_norm_coeff(g: Graph) -> jax.Array:
+    """GCN symmetric normalization 1/sqrt(d_src * d_dst) per edge."""
+    d_out = degrees(g.src, g.edge_mask, g.n_nodes)
+    d_in = degrees(g.dst, g.edge_mask, g.n_nodes)
+    d_out = jnp.maximum(d_out, 1.0)
+    d_in = jnp.maximum(d_in, 1.0)
+    coeff = jax.lax.rsqrt(d_out[g.src]) * jax.lax.rsqrt(d_in[g.dst])
+    return jnp.where(g.edge_mask, coeff, 0.0)
+
+
+def to_csr(src: np.ndarray, dst: np.ndarray, n_nodes: int):
+    """Host-side CSR build (row = src).  Returns (indptr, indices, perm)
+    where perm maps sorted-edge order back to input order."""
+    perm = np.argsort(src, kind="stable")
+    s = src[perm]
+    indptr = np.zeros(n_nodes + 1, dtype=np.int64)
+    np.add.at(indptr, s + 1, 1)
+    np.cumsum(indptr, out=indptr)
+    return indptr, dst[perm].astype(np.int32), perm

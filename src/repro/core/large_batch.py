@@ -1,0 +1,36 @@
+"""Large-batch training techniques (paper §7.1).
+
+The paper increases BPR batch size 1K -> 150K without recall loss via:
+  1. linear learning-rate scaling (Goyal et al.): lr = base_lr * B/B_base
+     (square-root scaling was tried and found worse);
+  2. warm-up *batch-size* schedule: train the first ``warmup_epochs``
+     epochs with batch = target/10, then switch to the target batch
+     (a too-small warm-up batch, e.g. the original 1K, hurts accuracy).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class LargeBatchSchedule:
+    base_lr: float
+    base_batch: int
+    target_batch: int
+    warmup_epochs: int = 2
+    warmup_divisor: int = 10      # paper: warm-up batch = target/10
+
+    def batch_for_epoch(self, epoch: int) -> int:
+        if epoch < self.warmup_epochs:
+            return max(self.base_batch, self.target_batch // self.warmup_divisor)
+        return self.target_batch
+
+    def lr_for_epoch(self, epoch: int) -> float:
+        return self.linear_scaled_lr(self.batch_for_epoch(epoch))
+
+    def linear_scaled_lr(self, batch: int) -> float:
+        return self.base_lr * (batch / self.base_batch)
+
+    def sqrt_scaled_lr(self, batch: int) -> float:
+        """Kept for the paper's ablation (found inferior)."""
+        return self.base_lr * (batch / self.base_batch) ** 0.5

@@ -1,0 +1,33 @@
+"""LightGCN (He et al., SIGIR'20): NGCF minus W1/W2/nonlinearity; final
+embedding = mean over layer outputs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import BipartiteGraph
+from repro.core.message_passing import (bipartite_sym_coeff,
+                                        lightgcn_propagate_bipartite)
+
+
+def init_params(key, n_users, n_items, embed_dim, n_layers=None, dtype=jnp.float32):
+    del n_layers  # static: passed to forward, not stored (keeps params grad-able)
+    k1, k2 = jax.random.split(key)
+    scale = 1.0 / jnp.sqrt(embed_dim)
+    return {
+        "user_embed": jax.random.normal(k1, (n_users, embed_dim), dtype) * scale,
+        "item_embed": jax.random.normal(k2, (n_items, embed_dim), dtype) * scale,
+    }
+
+
+def forward(params, g: BipartiteGraph, n_layers: int = 2, impl: str = "xla"):
+    """Returns (user_final, item_final) = mean over {x^(0)..x^(L)}."""
+    coeff = bipartite_sym_coeff(g)
+    xu, xi = params["user_embed"], params["item_embed"]
+    acc_u, acc_i = xu, xi
+    for _ in range(n_layers):
+        xu, xi = lightgcn_propagate_bipartite(g, xu, xi, coeff, impl=impl)
+        acc_u = acc_u + xu
+        acc_i = acc_i + xi
+    denom = n_layers + 1
+    return acc_u / denom, acc_i / denom

@@ -1,0 +1,91 @@
+"""Message-passing layer (paper Eq 1-3) with the §4 dataflow optimizations
+as explicit, toggleable rewrite levels.
+
+opt_level:
+  0  naive        — per-edge dense matmuls then scatter-add, the original
+                    DGL-style dataflow of Fig 4a: O(|E|) weight matmuls.
+  1  +reorder     — Fig 4b: aggregate first, multiply weights at node
+                    level: O(|V|) matmuls (optimization O1).
+  2  +kernelize   — Fig 4c: message gen/agg expressed as generalized
+                    SDDMM/SpMM kernel calls (optimization O2; dispatches
+                    to Pallas kernels with impl='pallas').
+  3  +sddmm reuse — compute x_u⊙x_i once per layer and reuse it for both
+                    propagation directions (optimization O3).
+
+Levels 1-3 are numerically identical; level 0 differs only by float
+reassociation.  Tests assert allclose across levels.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_ops
+from repro.core.graph import BipartiteGraph
+from repro.kernels import ops as kops
+
+
+def _sddmm(op, x, y, src, dst, mask, impl):
+    if impl == "xla":
+        return sparse_ops.sddmm(op, x, y, src, dst, mask)
+    return kops.sddmm(op, x, y, src, dst, mask, impl=impl)
+
+
+def ngcf_propagate_bipartite(g: BipartiteGraph, x_user, x_item, w1, w2,
+                             opt_level: int = 3, impl: str = "xla"):
+    """One NGCF message-passing layer on the bipartite graph; returns
+    (h_user, h_item).
+
+    m_e = (x_src ⊙ x_dst) W1 + x_src W2 ;  h_dst = Σ_e m_e
+    """
+    u, i, mask = g.user, g.item, g.edge_mask
+    nu, ni = g.n_users, g.n_items
+
+    if opt_level == 0:
+        # Fig 4a: weight matmuls at edge level (O(|E|) dense FLOPs).
+        mul_ui = jnp.where(mask[:, None], x_user[u] * x_item[i], 0)
+        m_to_item = mul_ui @ w1 + jnp.where(mask[:, None], x_user[u], 0) @ w2
+        m_to_user = mul_ui @ w1 + jnp.where(mask[:, None], x_item[i], 0) @ w2
+        h_item = jax.ops.segment_sum(m_to_item, i, num_segments=ni)
+        h_user = jax.ops.segment_sum(m_to_user, u, num_segments=nu)
+        return h_user, h_item
+
+    if opt_level >= 3:
+        # O3: one SDDMM serves both directions (x_u⊙x_i == x_i⊙x_u).
+        mul_e = _sddmm("mul", x_user, x_item, u, i, mask, impl)
+        agg_mul_item = sparse_ops.spmm("sum", mul_e, i, ni, mask)
+        agg_mul_user = sparse_ops.spmm("sum", mul_e, u, nu, mask)
+    else:
+        mul_e_item = _sddmm("mul", x_user, x_item, u, i, mask, impl)
+        mul_e_user = _sddmm("mul", x_item, x_user, i, u, mask, impl)
+        agg_mul_item = sparse_ops.spmm("sum", mul_e_item, i, ni, mask)
+        agg_mul_user = sparse_ops.spmm("sum", mul_e_user, u, nu, mask)
+
+    # O1: aggregate raw src features first, then one node-level matmul.
+    agg_src_item = sparse_ops.gspmm_copy_sum(x_user, u, i, ni, mask)
+    agg_src_user = sparse_ops.gspmm_copy_sum(x_item, i, u, nu, mask)
+    h_item = agg_mul_item @ w1 + agg_src_item @ w2
+    h_user = agg_mul_user @ w1 + agg_src_user @ w2
+    return h_user, h_item
+
+
+def lightgcn_propagate_bipartite(g: BipartiteGraph, x_user, x_item,
+                                 coeff_ui=None, impl: str = "xla"):
+    """One LightGCN layer: h_dst = Σ_e coeff_e · x_src (no weights)."""
+    u, i, mask = g.user, g.item, g.edge_mask
+    h_item = sparse_ops.gspmm_copy_sum(x_user, u, i, g.n_items, mask, coeff_ui)
+    h_user = sparse_ops.gspmm_copy_sum(x_item, i, u, g.n_users, mask, coeff_ui)
+    return h_user, h_item
+
+
+def bipartite_sym_coeff(g: BipartiteGraph) -> jax.Array:
+    """1/sqrt(d_u d_i) per interaction (LightGCN normalization)."""
+    ones = g.edge_mask.astype(jnp.float32)
+    du = jax.ops.segment_sum(ones, g.user, num_segments=g.n_users)
+    di = jax.ops.segment_sum(ones, g.item, num_segments=g.n_items)
+    du = jnp.maximum(du, 1.0)
+    di = jnp.maximum(di, 1.0)
+    c = jax.lax.rsqrt(du[g.user]) * jax.lax.rsqrt(di[g.item])
+    return jnp.where(g.edge_mask, c, 0.0)

@@ -1,0 +1,45 @@
+"""NGCF (Wang et al., SIGIR'19) as used by the paper: Eq (4)-(6) with the
+three §4 dataflow optimizations.  Final embedding = concat over layers
+(NGCF convention); BPR-trained."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import BipartiteGraph
+from repro.core.message_passing import ngcf_propagate_bipartite
+
+
+def init_params(key, n_users, n_items, embed_dim, n_layers, dtype=jnp.float32):
+    keys = jax.random.split(key, 2 + 2 * n_layers)
+    scale = 1.0 / jnp.sqrt(embed_dim)
+    params = {
+        "user_embed": jax.random.normal(keys[0], (n_users, embed_dim), dtype) * scale,
+        "item_embed": jax.random.normal(keys[1], (n_items, embed_dim), dtype) * scale,
+        "w1": [], "w2": [],
+    }
+    for l in range(n_layers):
+        params["w1"].append(jax.random.normal(keys[2 + 2 * l], (embed_dim, embed_dim), dtype) * scale)
+        params["w2"].append(jax.random.normal(keys[3 + 2 * l], (embed_dim, embed_dim), dtype) * scale)
+    return params
+
+
+def forward(params, g: BipartiteGraph, opt_level: int = 3, impl: str = "xla"):
+    """Returns (user_final, item_final): concat of all layer embeddings,
+    shape [n, (L+1)*D]."""
+    xu, xi = params["user_embed"], params["item_embed"]
+    outs_u, outs_i = [xu], [xi]
+    for w1, w2 in zip(params["w1"], params["w2"]):
+        xu, xi = ngcf_propagate_bipartite(g, xu, xi, w1, w2,
+                                          opt_level=opt_level, impl=impl)
+        xu = jax.nn.leaky_relu(xu, 0.2)
+        xi = jax.nn.leaky_relu(xi, 0.2)
+        outs_u.append(xu)
+        outs_i.append(xi)
+    return jnp.concatenate(outs_u, -1), jnp.concatenate(outs_i, -1)
+
+
+def n_layers(params) -> int:
+    return len(params["w1"])

@@ -1,0 +1,53 @@
+"""Jit'd dispatch wrappers: impl='xla' (jnp gather/segment ops — used for
+multi-pod lowering) vs impl='pallas' (TPU kernels; interpret=True on CPU).
+
+The per-kernel write policy table is the productized form of the paper's
+§6 guideline (nt-write for SDDMM, normal write for SpMM): the Pallas
+kernels bake the policy into their memory structure, and the table is
+what the TieredMemoryPlanner reads when costing kernel traffic.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import sparse_ops
+from repro.kernels import embedding_bag as _eb
+from repro.kernels import ref as _ref
+from repro.kernels import sddmm as _sddmm
+from repro.kernels import spmm as _spmm
+
+# paper §6 guideline, per kernel
+WRITE_POLICY = {
+    "sddmm": "streaming",      # nt-write analogue: no VMEM accumulator
+    "spmm": "accumulate",      # normal write: VMEM-resident accumulator
+    "embedding_bag": "accumulate",
+}
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def sddmm(op, x, y, src, dst, edge_mask, coeff=None, impl="xla", **kw):
+    if impl == "xla":
+        if op == "copy":
+            return _ref.sddmm_ref(op, x, y, src, dst, edge_mask, coeff)
+        return sparse_ops.sddmm(op, x, y, src, dst, edge_mask)
+    return _sddmm.sddmm_pallas(op, x, y, src, dst, edge_mask, coeff,
+                               interpret=not _on_tpu(), **kw)
+
+
+def spmm_csr(reduce, values, indptr, src_sorted, n_nodes, gather=False,
+             impl="xla", **kw):
+    if impl == "xla":
+        return _ref.spmm_csr_ref(reduce, values, indptr, src_sorted, n_nodes,
+                                 gather=gather)
+    return _spmm.spmm_csr_pallas(reduce, values, indptr, src_sorted, n_nodes,
+                                 gather=gather, interpret=not _on_tpu(), **kw)
+
+
+def embedding_bag(table, ids, mask, combiner="sum", impl="xla", **kw):
+    if impl == "xla":
+        return _ref.embedding_bag_ref(table, ids, mask, combiner)
+    return _eb.embedding_bag_pallas(table, ids, mask, combiner,
+                                    interpret=not _on_tpu(), **kw)

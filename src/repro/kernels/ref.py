@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sddmm_ref(op: str, x: jax.Array, y: jax.Array, src: jax.Array,
+              dst: jax.Array, edge_mask: jax.Array,
+              coeff: jax.Array | None = None) -> jax.Array:
+    a = x[src]
+    if op == "copy":
+        m = a if coeff is None else a * coeff[:, None]
+    else:
+        b = y[dst]
+        if op == "mul":
+            m = a * b
+        elif op == "add":
+            m = a + b
+        elif op == "dot":
+            m = jnp.sum(a * b, axis=-1)
+        else:
+            raise ValueError(op)
+    mask = edge_mask if m.ndim == 1 else edge_mask[:, None]
+    return jnp.where(mask, m, 0.0)
+
+
+def spmm_csr_ref(reduce: str, values: jax.Array, indptr: jax.Array,
+                 src_sorted: jax.Array, n_nodes: int,
+                 gather: bool = False) -> jax.Array:
+    e = src_sorted.shape[0] if gather else values.shape[0]
+    # dst id per sorted edge from indptr
+    dst = jnp.searchsorted(indptr, jnp.arange(e), side="right") - 1
+    rows = values[src_sorted] if gather else values
+    if reduce == "sum":
+        return jax.ops.segment_sum(rows, dst, num_segments=n_nodes)
+    if reduce == "max":
+        out = jax.ops.segment_max(rows, dst, num_segments=n_nodes)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(reduce)
+
+
+def embedding_bag_ref(table: jax.Array, ids: jax.Array, mask: jax.Array,
+                      combiner: str = "sum") -> jax.Array:
+    rows = table[ids]                                  # [B, L, D]
+    rows = jnp.where(mask[..., None], rows, 0.0)
+    out = rows.sum(axis=1)
+    if combiner == "mean":
+        cnt = jnp.maximum(mask.sum(axis=1), 1)
+        out = out / cnt[:, None]
+    return out

@@ -1,0 +1,145 @@
+"""Memory-bounded attention: online-softmax over K/V chunks (flash-style,
+pure JAX — XLA fuses the tile loop; the Pallas fusion lives in the same
+algebra).
+
+Why it exists: a 32k prefill with materialized [B, H, S, S] scores is
+~50 GiB/device on the 340B config — the tile loop caps the transient at
+[B, H, q_chunk, k_chunk].
+
+Banded windows are *compute-skipped*, not just masked: for a layer with
+window W, each query chunk only visits ceil(W/k_chunk)+1 key chunks via
+dynamic_slice, so SWA/local-global prefill FLOPs scale O(S*W) instead of
+O(S^2) — this is what makes gemma2/mixtral `long_500k`-eligible.
+
+GQA is computed grouped ([B, G, rep, ...]) so K/V are never materialized
+repeated across query heads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _tile(q, kt, vt, qpos, kpos, scale, softcap, causal, window, carry):
+    """One (q_chunk x k_chunk) online-softmax update.
+    q [B,G,R,Qc,dh]; kt/vt [B,G,Kc,dh]; carry = (m, l, acc)."""
+    m, l, acc = carry
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", q, kt).astype(jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + p.sum(-1)
+    pv = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(vt.dtype), vt)
+    acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+    return m_new, l_new, acc_new
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    q_chunk=512, k_chunk=1024, kv_offset=0):
+    """q [B, Sq, H, dh]; k/v [B, Sk, G, dh] with H = G*rep.
+    kv_offset: global position of k[0] (for windowed caches).
+    Returns [B, Sq, H, dh]."""
+    b, sq, h, dh = q.shape
+    sk, g = k.shape[1], k.shape[2]
+    rep = h // g
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, sk)
+    nq = -(-sq // q_chunk)
+    nk = -(-sk // k_chunk)
+    sq_pad, sk_pad = nq * q_chunk, nk * k_chunk
+    scale = dh ** -0.5
+
+    qg = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0), (0, 0)))
+    qg = qg.reshape(b, nq, q_chunk, g, rep, dh).transpose(1, 0, 3, 4, 2, 5)
+    kp = jnp.pad(k, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+    kp = kp.transpose(0, 2, 1, 3)   # [B, G, Sk, dh]
+    vp = vp.transpose(0, 2, 1, 3)
+    kpos_all = kv_offset + jnp.arange(sk_pad)
+    kvalid = jnp.arange(sk_pad) < sk
+
+    banded = window is not None and window < sk_pad
+
+    def q_body(qi, qc):
+        qpos = kv_offset + (sk - sq) + qi * q_chunk + jnp.arange(q_chunk)
+        m0 = jnp.full((b, g, rep, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, g, rep, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, g, rep, q_chunk, dh), v.dtype)
+
+        if banded:
+            # visit only the k-chunks intersecting [qpos0-window, qpos_end]
+            n_vis = min(nk, window // k_chunk + 2)
+            q_hi_chunk = (qi * q_chunk + (sk - sq) + q_chunk - 1) // k_chunk
+            start = jnp.clip(q_hi_chunk - (n_vis - 1), 0, nk - n_vis)
+
+            def k_body(j, carry):
+                kj = start + j
+                kt = jax.lax.dynamic_slice(
+                    kp, (0, 0, kj * k_chunk, 0), (b, g, k_chunk, dh))
+                vt = jax.lax.dynamic_slice(
+                    vp, (0, 0, kj * k_chunk, 0), (b, g, k_chunk, dh))
+                kpos = kv_offset + kj * k_chunk + jnp.arange(k_chunk)
+                kpos = jnp.where(
+                    jax.lax.dynamic_slice(kvalid, (kj * k_chunk,), (k_chunk,)),
+                    kpos, jnp.iinfo(jnp.int32).max)  # mask pad keys
+                return _tile(qc, kt, vt, qpos, kpos, scale, softcap,
+                             causal, window, carry)
+
+            m, l, acc = jax.lax.fori_loop(0, n_vis, k_body, (m0, l0, a0))
+        else:
+            def k_body(j, carry):
+                kt = jax.lax.dynamic_slice(
+                    kp, (0, 0, j * k_chunk, 0), (b, g, k_chunk, dh))
+                vt = jax.lax.dynamic_slice(
+                    vp, (0, 0, j * k_chunk, 0), (b, g, k_chunk, dh))
+                kpos = kv_offset + j * k_chunk + jnp.arange(k_chunk)
+                kpos = jnp.where(
+                    jax.lax.dynamic_slice(kvalid, (j * k_chunk,), (k_chunk,)),
+                    kpos, jnp.iinfo(jnp.int32).max)
+                return _tile(qc, kt, vt, qpos, kpos, scale, softcap,
+                             causal, window, carry)
+
+            m, l, acc = jax.lax.fori_loop(0, nk, k_body, (m0, l0, a0))
+
+        out = acc / jnp.maximum(l, 1e-20)[..., None].astype(acc.dtype)
+        return out  # [B, G, R, Qc, dh]
+
+    outs = jax.vmap(q_body, in_axes=(0, 0))(jnp.arange(nq), qg)
+    # [nq, B, G, R, Qc, dh] -> [B, Sq, H, dh]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq_pad, h, dh)
+    return out[:, :sq]
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                  kv_offset=0):
+    """Dense oracle for tests."""
+    b, sq, h, dh = q.shape
+    sk, g = k.shape[1], k.shape[2]
+    rep = h // g
+    kf = jnp.repeat(k, rep, axis=2)
+    vf = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kf).astype(jnp.float32) * dh ** -0.5
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = kv_offset + (sk - sq) + jnp.arange(sq)
+    kpos = kv_offset + jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, -1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf)

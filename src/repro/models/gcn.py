@@ -1,0 +1,104 @@
+"""GCN (Kipf & Welling, arXiv:1609.02907) — the assigned gnn arch.
+
+Four operating shapes:
+  full_graph_sm / ogb_products : full-batch training (one SpMM per layer
+    over the whole graph — the paper's single-machine full-graph regime);
+  minibatch_lg : sampled-block training (fanout 15-10) — the DistDGL-style
+    regime the paper compares against;
+  molecule     : batched small graphs + mean readout.
+
+GCN's message fn is a scalar-weighted copy, so message+aggregate fuse
+into ONE SpMM (paper §9) — ``gspmm_copy_sum`` with the symmetric-norm
+coefficient.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import Graph, sym_norm_coeff
+from repro.core.sparse_ops import gspmm_copy_sum
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str = "gcn-cora"
+    n_layers: int = 2
+    d_hidden: int = 16
+    n_classes: int = 7
+    d_feat: int = 1433
+    dropout: float = 0.0   # eval-mode default; training uses rng arg
+
+
+def init_params(cfg: GCNConfig, key) -> dict:
+    dims = [cfg.d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    ks = jax.random.split(key, cfg.n_layers)
+    ws = []
+    for l in range(cfg.n_layers):
+        scale = jnp.sqrt(2.0 / dims[l])
+        ws.append({"w": jax.random.normal(ks[l], (dims[l], dims[l + 1]),
+                                          jnp.float32) * scale,
+                   "b": jnp.zeros((dims[l + 1],), jnp.float32)})
+    return {"layers": ws}
+
+
+def forward(cfg: GCNConfig, params, g: Graph, x):
+    """Full-graph forward: x [N, F] -> logits [N, C]."""
+    coeff = sym_norm_coeff(g)
+    for l, w in enumerate(params["layers"]):
+        # aggregate-then-transform keeps the matmul at O(|V|) (paper O1)
+        x = gspmm_copy_sum(x, g.src, g.dst, g.n_nodes, g.edge_mask, coeff)
+        x = x @ w["w"] + w["b"]
+        if l + 1 < cfg.n_layers:
+            x = jax.nn.relu(x)
+    return x
+
+
+def forward_blocks(cfg: GCNConfig, params, blocks, x):
+    """Sampled-block forward (deepest block first); x aligns with
+    blocks[0].src_nodes rows."""
+    for l, (w, b) in enumerate(zip(params["layers"], blocks)):
+        src, dst, mask = b["edge_src"], b["edge_dst"], b["edge_mask"]
+        n_dst = b["n_dst"]
+        m = jnp.where(mask[:, None], x[src], 0)
+        h = jax.ops.segment_sum(m, dst, num_segments=n_dst)
+        deg = jax.ops.segment_sum(mask.astype(x.dtype), dst, num_segments=n_dst)
+        x = h / jnp.maximum(deg, 1.0)[:, None]
+        x = x @ w["w"] + w["b"]
+        if l + 1 < cfg.n_layers:
+            x = jax.nn.relu(x)
+    return x
+
+
+def forward_batched(cfg: GCNConfig, params, src, dst, edge_mask, x, graph_ids,
+                    n_graphs: int):
+    """molecule shape: node-batched small graphs.
+    x [B*n, F]; src/dst index into the flat node axis; graph_ids [B*n]."""
+    n = x.shape[0]
+    ones = edge_mask.astype(jnp.float32)
+    deg_o = jax.ops.segment_sum(ones, src, num_segments=n)
+    deg_i = jax.ops.segment_sum(ones, dst, num_segments=n)
+    coeff = jax.lax.rsqrt(jnp.maximum(deg_o, 1.0))[src] * \
+        jax.lax.rsqrt(jnp.maximum(deg_i, 1.0))[dst]
+    coeff = jnp.where(edge_mask, coeff, 0.0)
+    for l, w in enumerate(params["layers"]):
+        m = x[src] * coeff[:, None]
+        m = jnp.where(edge_mask[:, None], m, 0)
+        x = jax.ops.segment_sum(m, dst, num_segments=n)
+        x = x @ w["w"] + w["b"]
+        if l + 1 < cfg.n_layers:
+            x = jax.nn.relu(x)
+    # mean readout per graph
+    pooled = jax.ops.segment_sum(x, graph_ids, num_segments=n_graphs)
+    cnt = jax.ops.segment_sum(jnp.ones((n,)), graph_ids, num_segments=n_graphs)
+    return pooled / jnp.maximum(cnt, 1.0)[:, None]
+
+
+def loss_fn(cfg: GCNConfig, params, g: Graph, x, labels, label_mask):
+    logits = forward(cfg, params, g, x)
+    logp = jax.nn.log_softmax(logits, -1)
+    ll = jnp.take_along_axis(logp, labels[:, None], -1)[:, 0]
+    return -jnp.sum(ll * label_mask) / jnp.maximum(label_mask.sum(), 1.0)

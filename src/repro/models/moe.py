@@ -1,0 +1,111 @@
+"""Sort-based top-k MoE dispatch (MegaBlocks-style, dense-capacity form).
+
+The GShard one-hot dispatch tensor [T, E, C] is infeasible at kimi scale
+(1M tokens x 384 experts); instead tokens are argsorted by expert id, a
+rank-within-expert gives each (token, slot) a capacity position, and
+overflow tokens are dropped into a scratch row (position C) that is
+sliced off — the standard static-shape JAX formulation.  Expert compute
+is a batched einsum over the expert axis, which GSPMD shards over the
+mesh 'model' axis (expert parallelism with all_to_all at the
+scatter/gather boundaries).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _axis_size(axis_name: str) -> int:
+    """Size of a mesh axis from the ambient physical mesh (0 if absent)."""
+    try:
+        import jax._src.mesh as mesh_lib
+        env_mesh = mesh_lib.thread_resources.env.physical_mesh
+        if env_mesh.empty:
+            return 0
+        return env_mesh.shape.get(axis_name, 0)
+    except Exception:  # noqa: BLE001
+        return 0
+
+
+def moe_ffn(cfg, x, w):
+    """x [B, S, D] -> [B, S, D] through top-k routed experts."""
+    b, s, d = x.shape
+    t = b * s
+    e, k, f = cfg.n_experts, cfg.top_k, cfg.moe_d_ff
+    xt = x.reshape(t, d)
+    # the [B(dp), S(tp), D] -> [T, D] reshape is inexpressible in GSPMD
+    # shardings; without an explicit pin the whole dispatch chain
+    # replicates (~10 live [T, D] f32 buffers per device at 131k tokens)
+    from repro.dist.hints import constrain as _constrain
+    xt = _constrain(xt, "dp+tp", None)
+
+    gate_logits = (xt.astype(jnp.float32) @ w["router"])          # [T, E]
+    topw, topi = jax.lax.top_k(gate_logits, k)                     # [T, K]
+    topw = jax.nn.softmax(topw, axis=-1).astype(x.dtype)
+
+    cap = int((t * k) / e * cfg.capacity_factor) + 1
+
+    flat_e = topi.reshape(-1)                                      # [T*K]
+    order = jnp.argsort(flat_e)                                    # stable
+    sorted_e = flat_e[order]
+    # rank within expert = index - first occurrence of this expert id
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos = jnp.arange(t * k) - first
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, cap)                              # overflow row
+    tok_of = order // k
+
+    # GSPMD-friendly dispatch: scatters touch only small int32 tables;
+    # all D-wide data movement is gathers (a row-wise scatter of [E,C,D]
+    # makes the SPMD partitioner replicate operand-sized index tensors).
+    tok_table = jnp.full((e, cap + 1), t, jnp.int32)
+    tok_table = tok_table.at[sorted_e, pos_c].set(tok_of)          # [E, C+1]
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), x.dtype)])     # row t = 0
+    x_disp = xt_pad[tok_table[:, :cap]]                            # [E, C, D]
+    # EP when experts divide 'model' (kimi), else capacity over dp (mixtral)
+    from repro.dist.hints import constrain, get_hints
+    h = get_hints()
+    tp_sz = _axis_size(h["tp"]) if h is not None else 0
+    ep = tp_sz > 0 and e % tp_sz == 0
+    # EP: experts over 'model' AND capacity over dp (2D) so the dispatch
+    # gather never replicates a [E, C, D] copy per device
+    x_disp = constrain(x_disp, "tp" if ep else None, "dp", None)
+
+    # expert compute (batched over E -> GSPMD shards this axis)
+    if cfg.activation == "swiglu":
+        up = jnp.einsum("ecd,edf->ecf", x_disp, w["w_up"])
+        gate = jax.nn.silu(
+            jnp.einsum("ecd,edf->ecf", x_disp, w["w_gate"]).astype(jnp.float32)
+        ).astype(x.dtype)
+        h = up * gate
+    else:
+        h = jax.nn.gelu(
+            jnp.einsum("ecd,edf->ecf", x_disp, w["w_up"]).astype(jnp.float32)
+        ).astype(x.dtype)
+    y_exp = jnp.einsum("ecf,efd->ecd", h, w["w_down"])             # [E, C, D]
+    y_exp = constrain(y_exp, "tp" if ep else None, "dp", None)
+
+    # combine: map each (token, slot) to its capacity position via a
+    # small int32 scatter, then gather its expert output row
+    pos_flat = jnp.full((t * k,), cap, jnp.int32).at[order].set(pos_c)
+    y_pad = jnp.concatenate([y_exp, jnp.zeros((e, 1, d), x.dtype)], axis=1)
+    y_sorted = y_pad[flat_e, pos_flat]                             # [T*K, D]
+    y_sorted = _constrain(y_sorted, "dp+tp", None)
+    y_flat = y_sorted.reshape(t, k, d)                             # [T, K, D]
+    y = jnp.sum(y_flat * topw[..., None], axis=1)                  # [T, D]
+    y = _constrain(y, "dp+tp", None)
+
+    if cfg.shared_experts:
+        # shared expert: always-on FFN branch (no separate gate matrix)
+        up = xt @ w["ws_up"]
+        act = jax.nn.silu(up.astype(jnp.float32)).astype(x.dtype)
+        y = y + act @ w["ws_down"]
+    return y.reshape(b, s, d)
+
+
+def load_balance_loss(gate_logits: jax.Array, topi: jax.Array, e: int):
+    """Switch-style aux loss: E * sum_e (frac_tokens_e * mean_prob_e)."""
+    probs = jax.nn.softmax(gate_logits, -1)
+    counts = jnp.zeros((e,)).at[topi.reshape(-1)].add(1.0)
+    frac = counts / counts.sum()
+    return e * jnp.sum(frac * probs.mean(0))

@@ -1,0 +1,341 @@
+"""Assigned recsys architectures on the shared embedding substrate.
+
+  deepfm    (arXiv:1703.04247): FM interaction ∥ deep MLP 400-400-400
+  xdeepfm   (arXiv:1803.05170): CIN 200-200-200 ∥ MLP 400-400
+  bert4rec  (arXiv:1904.06690): bidirectional transformer over item seqs
+  dlrm-rm2  (arXiv:1906.00091): bottom MLP + 26 tables + dot interaction
+
+All sparse lookups go through the embedding-bag substrate (single-hot
+fields = bag length 1); tables are stacked [F, V, D] so the row axis can
+be sharded over the whole mesh (the paper's capacity-tier residents).
+``serve_retrieval`` scores 1M candidates by swapping the item field and
+reusing the fixed user-side compute — a batched dot, not a loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------- common
+
+def _mlp_params(key, dims, dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    out = []
+    for i in range(len(dims) - 1):
+        scale = jnp.sqrt(2.0 / dims[i])
+        out.append({"w": jax.random.normal(ks[i], (dims[i], dims[i + 1]),
+                                           dtype) * scale,
+                    "b": jnp.zeros((dims[i + 1],), dtype)})
+    return out
+
+
+def _mlp(params, x, final_act=False):
+    for i, l in enumerate(params):
+        x = x @ l["w"] + l["b"]
+        if i + 1 < len(params) or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def lookup_fields(tables: jax.Array, ids: jax.Array) -> jax.Array:
+    """tables [F, V, D]; ids [B, F] single-hot -> [B, F, D]."""
+    return jax.vmap(lambda tab, col: tab[col], in_axes=(0, 1),
+                    out_axes=1)(tables, ids)
+
+
+def bce_loss(logits, labels):
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+# ----------------------------------------------------------------- deepfm
+
+@dataclasses.dataclass(frozen=True)
+class DeepFMConfig:
+    name: str = "deepfm"
+    n_sparse: int = 39
+    embed_dim: int = 10
+    vocab: int = 1_000_000
+    mlp_dims: tuple = (400, 400, 400)
+
+
+def deepfm_init(cfg: DeepFMConfig, key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "tables": jax.random.normal(
+            k1, (cfg.n_sparse, cfg.vocab, cfg.embed_dim)) * 0.01,
+        "linear": jax.random.normal(k2, (cfg.n_sparse, cfg.vocab)) * 0.01,
+        "mlp": _mlp_params(k3, (cfg.n_sparse * cfg.embed_dim,) + cfg.mlp_dims
+                           + (1,)),
+        "bias": jnp.zeros(()),
+    }
+
+
+def fm_interaction(emb: jax.Array) -> jax.Array:
+    """emb [B, F, D] -> [B] second-order FM term:
+    0.5 * ((Σ_f v_f)^2 − Σ_f v_f^2) summed over D."""
+    s = emb.sum(1)
+    s2 = (emb * emb).sum(1)
+    return 0.5 * (s * s - s2).sum(-1)
+
+
+def deepfm_forward(cfg: DeepFMConfig, params, ids):
+    emb = lookup_fields(params["tables"], ids)                       # [B,F,D]
+    first = jax.vmap(lambda tab, col: tab[col], in_axes=(0, 1),
+                     out_axes=1)(params["linear"], ids).sum(-1)      # [B]
+    fm = fm_interaction(emb)
+    deep = _mlp(params["mlp"], emb.reshape(emb.shape[0], -1))[:, 0]
+    return first + fm + deep + params["bias"]
+
+
+# ----------------------------------------------------------------- xdeepfm
+
+@dataclasses.dataclass(frozen=True)
+class XDeepFMConfig:
+    name: str = "xdeepfm"
+    n_sparse: int = 39
+    embed_dim: int = 10
+    vocab: int = 1_000_000
+    cin_layers: tuple = (200, 200, 200)
+    mlp_dims: tuple = (400, 400)
+
+
+def xdeepfm_init(cfg: XDeepFMConfig, key):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    cin = []
+    h_prev = cfg.n_sparse
+    kcs = jax.random.split(k4, len(cfg.cin_layers))
+    for h, kc in zip(cfg.cin_layers, kcs):
+        cin.append(jax.random.normal(kc, (h, h_prev, cfg.n_sparse)) *
+                   jnp.sqrt(2.0 / (h_prev * cfg.n_sparse)))
+        h_prev = h
+    return {
+        "tables": jax.random.normal(
+            k1, (cfg.n_sparse, cfg.vocab, cfg.embed_dim)) * 0.01,
+        "linear": jax.random.normal(k2, (cfg.n_sparse, cfg.vocab)) * 0.01,
+        "mlp": _mlp_params(k3, (cfg.n_sparse * cfg.embed_dim,) + cfg.mlp_dims
+                           + (1,)),
+        "cin": cin,
+        "cin_out": jax.random.normal(k5, (sum(cfg.cin_layers), 1)) * 0.1,
+        "bias": jnp.zeros(()),
+    }
+
+
+def cin(params_cin, x0):
+    """Compressed Interaction Network.  x0 [B, F, D]."""
+    xk = x0
+    outs = []
+    for w in params_cin:
+        # z [B, Hk, F, D] = outer product along field axes
+        z = jnp.einsum("bhd,bmd->bhmd", xk, x0)
+        xk = jnp.einsum("bhmd,nhm->bnd", z, w)                      # [B, H, D]
+        outs.append(xk.sum(-1))                                     # [B, H]
+    return jnp.concatenate(outs, -1)
+
+
+def xdeepfm_forward(cfg: XDeepFMConfig, params, ids):
+    emb = lookup_fields(params["tables"], ids)
+    first = jax.vmap(lambda tab, col: tab[col], in_axes=(0, 1),
+                     out_axes=1)(params["linear"], ids).sum(-1)
+    p = cin(params["cin"], emb) @ params["cin_out"]
+    deep = _mlp(params["mlp"], emb.reshape(emb.shape[0], -1))[:, 0]
+    return first + p[:, 0] + deep + params["bias"]
+
+
+# ----------------------------------------------------------------- bert4rec
+
+@dataclasses.dataclass(frozen=True)
+class BERT4RecConfig:
+    name: str = "bert4rec"
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    n_items: int = 1_000_000
+    d_ff: int = 256
+
+
+def bert4rec_init(cfg: BERT4RecConfig, key):
+    ks = jax.random.split(key, 3 + cfg.n_blocks)
+    d = cfg.embed_dim
+    blocks = []
+    for i in range(cfg.n_blocks):
+        kb = jax.random.split(ks[3 + i], 6)
+        s = 1.0 / jnp.sqrt(d)
+        blocks.append({
+            "wq": jax.random.normal(kb[0], (d, d)) * s,
+            "wk": jax.random.normal(kb[1], (d, d)) * s,
+            "wv": jax.random.normal(kb[2], (d, d)) * s,
+            "wo": jax.random.normal(kb[3], (d, d)) * s,
+            "w1": jax.random.normal(kb[4], (d, cfg.d_ff)) * s,
+            "w2": jax.random.normal(kb[5], (cfg.d_ff, d)) *
+                  (1.0 / jnp.sqrt(cfg.d_ff)),
+            "ln1": jnp.ones((d,)), "ln2": jnp.ones((d,)),
+        })
+    return {
+        "item_embed": jax.random.normal(ks[0], (cfg.n_items, d)) * 0.02,
+        "pos_embed": jax.random.normal(ks[1], (cfg.seq_len, d)) * 0.02,
+        "blocks": blocks,
+        "out_bias": jnp.zeros((cfg.n_items,)),
+    }
+
+
+def _ln(x, w, eps=1e-6):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * w
+
+
+def bert4rec_encode(cfg: BERT4RecConfig, params, item_seq, seq_mask):
+    """item_seq [B, S] -> hidden [B, S, D] (bidirectional: no causal mask)."""
+    b, s = item_seq.shape
+    d, h = cfg.embed_dim, cfg.n_heads
+    x = params["item_embed"][item_seq] + params["pos_embed"][None, :s]
+    attn_mask = seq_mask[:, None, None, :]  # key-side padding mask
+    for blk in params["blocks"]:
+        y = _ln(x, blk["ln1"])
+        q = (y @ blk["wq"]).reshape(b, s, h, d // h)
+        k = (y @ blk["wk"]).reshape(b, s, h, d // h)
+        v = (y @ blk["wv"]).reshape(b, s, h, d // h)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(d / h)
+        logits = jnp.where(attn_mask, logits, -1e30)
+        p = jax.nn.softmax(logits, -1)
+        a = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(b, s, d)
+        x = x + a @ blk["wo"]
+        y = _ln(x, blk["ln2"])
+        x = x + jax.nn.gelu(y @ blk["w1"]) @ blk["w2"]
+    return x
+
+
+def bert4rec_loss(cfg: BERT4RecConfig, params, item_seq, seq_mask, labels,
+                  label_mask):
+    """Cloze objective: predict masked items (tied output embedding)."""
+    hid = bert4rec_encode(cfg, params, item_seq, seq_mask)
+    logits = hid @ params["item_embed"].T + params["out_bias"]
+    logp = jax.nn.log_softmax(logits, -1)
+    ll = jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+    return -jnp.sum(ll * label_mask) / jnp.maximum(label_mask.sum(), 1.0)
+
+
+def bert4rec_sampled_loss(cfg: BERT4RecConfig, params, item_seq, seq_mask,
+                          mask_pos, labels, neg_ids):
+    """Cloze objective with sampled softmax (full-vocab logits at
+    65536x200 positions x 1M items would be ~50 TB — see configs).
+    mask_pos [B, M]: masked positions; labels [B, M]: true items;
+    neg_ids [B, M, N]: sampled negatives."""
+    hid = bert4rec_encode(cfg, params, item_seq, seq_mask)
+    h = jnp.take_along_axis(hid, mask_pos[..., None], axis=1)       # [B,M,D]
+    cand = jnp.concatenate([labels[..., None], neg_ids], -1)        # [B,M,1+N]
+    ce = params["item_embed"][cand]                                 # [B,M,1+N,D]
+    logits = jnp.einsum("bmd,bmnd->bmn", h, ce) + params["out_bias"][cand]
+    logp = jax.nn.log_softmax(logits, -1)
+    return -jnp.mean(logp[..., 0])
+
+
+def bert4rec_serve(cfg: BERT4RecConfig, params, item_seq, seq_mask,
+                   slate_ids):
+    """Online/bulk serving: user representation + re-ranking slate scores
+    (catalogue-wide scoring is the retrieval cell's job)."""
+    hid = bert4rec_encode(cfg, params, item_seq, seq_mask)
+    u = hid[:, -1]                                                  # [B, D]
+    cand = params["item_embed"][slate_ids]                          # [B,K,D]
+    scores = jnp.einsum("bd,bkd->bk", u, cand)
+    return u, scores
+
+
+def bert4rec_retrieve(cfg: BERT4RecConfig, params, item_seq, seq_mask,
+                      cand_ids):
+    """Score the last position against candidate items (batched dot)."""
+    hid = bert4rec_encode(cfg, params, item_seq, seq_mask)
+    u = hid[:, -1]                                     # [B, D]
+    cand = params["item_embed"][cand_ids]              # [C, D]
+    return u @ cand.T                                  # [B, C]
+
+
+# ----------------------------------------------------------------- dlrm
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    vocab: int = 10_000_000
+    bot_mlp: tuple = (512, 256, 64)
+    top_mlp: tuple = (512, 512, 256, 1)
+
+
+def dlrm_init(cfg: DLRMConfig, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    f = cfg.n_sparse + 1
+    n_inter = f * (f - 1) // 2
+    top_in = cfg.bot_mlp[-1] + n_inter
+    return {
+        "tables": jax.random.normal(
+            k1, (cfg.n_sparse, cfg.vocab, cfg.embed_dim)) * 0.01,
+        "bot": _mlp_params(k2, (cfg.n_dense,) + cfg.bot_mlp),
+        "top": _mlp_params(k3, (top_in,) + cfg.top_mlp),
+    }
+
+
+def dot_interaction(vecs: jax.Array) -> jax.Array:
+    """vecs [B, F, D] -> strictly-lower-triangular pairwise dots [B, F(F-1)/2]."""
+    f = vecs.shape[1]
+    z = jnp.einsum("bfd,bgd->bfg", vecs, vecs)
+    iu, ju = jnp.tril_indices(f, -1)
+    return z[:, iu, ju]
+
+
+def dlrm_forward_from_emb(cfg: DLRMConfig, params, dense, emb):
+    """Forward given pre-gathered embeddings [B, F, D] — the grad entry
+    point for lazy/row-wise table optimizers."""
+    bot = _mlp(params["bot"], dense, final_act=True)                 # [B, 64]
+    vecs = jnp.concatenate([bot[:, None], emb], 1)                   # [B,27,64]
+    inter = dot_interaction(vecs)
+    top_in = jnp.concatenate([bot, inter], -1)
+    return _mlp(params["top"], top_in)[:, 0]
+
+
+def dlrm_forward(cfg: DLRMConfig, params, dense, ids):
+    emb = lookup_fields(params["tables"], ids)                       # [B,26,64]
+    return dlrm_forward_from_emb(cfg, params, dense, emb)
+
+
+def rowwise_adagrad_update(tables, acc, ids, g_emb, lr=0.01, eps=1e-8):
+    """Lazy row-wise AdaGrad (the production DLRM optimizer): only the
+    B*F touched rows are read/updated and the accumulator is one scalar
+    per ROW ([F, V] instead of [F, V, D]) — vs dense Adam which streams
+    the entire [F, V, D] table plus two moments every step.
+
+    tables [F, V, D]; acc [F, V]; ids [B, F]; g_emb [B, F, D].
+    """
+    g2 = (g_emb.astype(jnp.float32) ** 2).mean(-1)                   # [B, F]
+
+    def per_field(tab, a, col, g, gsq):
+        a = a.at[col].add(gsq)                                       # [V]
+        scale = jax.lax.rsqrt(a[col] + eps)                          # [B]
+        tab = tab.at[col].add((-lr * scale[:, None] * g).astype(tab.dtype))
+        return tab, a
+
+    return jax.vmap(per_field, in_axes=(0, 0, 1, 1, 1))(
+        tables, acc, ids, g_emb, g2)
+
+
+def dlrm_retrieve(cfg: DLRMConfig, params, dense, ids, cand_ids):
+    """1 user x C candidates: user-side compute once, swap field 0.
+    dense [1, 13]; ids [1, 26]; cand_ids [C]."""
+    bot = _mlp(params["bot"], dense, final_act=True)                 # [1, 64]
+    emb = lookup_fields(params["tables"], ids)                       # [1,26,64]
+    cand = params["tables"][0][cand_ids]                             # [C, 64]
+    c = cand_ids.shape[0]
+    vecs = jnp.concatenate([bot[:, None], emb], 1)                   # [1,27,64]
+    vecs = jnp.broadcast_to(vecs, (c,) + vecs.shape[1:])
+    vecs = vecs.at[:, 1].set(cand)                                   # swap item field
+    inter = dot_interaction(vecs)
+    top_in = jnp.concatenate([jnp.broadcast_to(bot, (c, bot.shape[1])),
+                              inter], -1)
+    return _mlp(params["top"], top_in)[:, 0]

@@ -1,0 +1,439 @@
+"""Decoder-only transformer backbone covering the five assigned LM archs:
+
+  nemotron-4-340b  GQA kv8, squared-ReLU FFN
+  gemma2-2b        GQA kv4, alternating local(4096)/global attn, softcaps
+  granite-3-8b     GQA kv8, SwiGLU
+  mixtral-8x7b     GQA kv8, SWA(4096), MoE 8e top-2
+  kimi-k2-1t-a32b  GQA kv8, MoE 384e top-8 (+1 shared), SwiGLU
+
+Layers are stacked [L, ...] and applied with lax.scan (+remat), so HLO
+size and compile time are depth-independent — required for the 96-layer
+340B dry-run.  Train steps use gradient (micro-batch) accumulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.moe import moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int | None = None
+    activation: str = "swiglu"            # swiglu | squared_relu | gelu
+    attn_type: str = "full"               # full | swa | local_global
+    window: int = 4096
+    attn_softcap: float | None = None     # gemma2: 50.0
+    final_softcap: float | None = None    # gemma2: 30.0
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # numerics / training
+    dtype: str = "bfloat16"
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        h, kv, dh = self.n_heads, self.n_kv_heads, self.head_dim
+        attn = d * h * dh + 2 * d * kv * dh + h * dh * d
+        if self.is_moe:
+            fmoe = self.moe_d_ff
+            n_mats = 3 if self.activation == "swiglu" else 2
+            ffn = (self.n_experts + self.shared_experts) * n_mats * d * fmoe \
+                + d * self.n_experts
+        else:
+            n_mats = 3 if self.activation == "swiglu" else 2
+            ffn = n_mats * d * f
+        return self.n_layers * (attn + ffn + 2 * d) + 2 * v * d + d
+
+    def active_param_count(self) -> int:
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        h, kv, dh = self.n_heads, self.n_kv_heads, self.head_dim
+        attn = d * h * dh + 2 * d * kv * dh + h * dh * d
+        n_mats = 3 if self.activation == "swiglu" else 2
+        ffn = (self.top_k + self.shared_experts) * n_mats * d * self.moe_d_ff \
+            + d * self.n_experts
+        return self.n_layers * (attn + ffn + 2 * d) + 2 * self.vocab * d + d
+
+
+# ----------------------------------------------------------------- params
+
+def init_params(cfg: TransformerConfig, key) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, dh = cfg.d_model, cfg.head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    l = cfg.n_layers
+    ks = jax.random.split(key, 12)
+    s = lambda *shape: 1.0 / jnp.sqrt(shape[-2] if len(shape) > 1 else shape[-1])
+
+    def norm(k, *shape):
+        return (jax.random.normal(k, shape, jnp.float32) * 0.02).astype(dt)
+
+    layers = {
+        "attn_norm": jnp.ones((l, d), dt),
+        "ffn_norm": jnp.ones((l, d), dt),
+        "wq": norm(ks[0], l, d, h * dh),
+        "wk": norm(ks[1], l, d, kv * dh),
+        "wv": norm(ks[2], l, d, kv * dh),
+        "wo": norm(ks[3], l, h * dh, d),
+    }
+    if cfg.is_moe:
+        e, f = cfg.n_experts, cfg.moe_d_ff
+        layers["router"] = norm(ks[4], l, d, e).astype(jnp.float32)
+        layers["w_up"] = norm(ks[5], l, e, d, f)
+        layers["w_down"] = norm(ks[6], l, e, f, d)
+        if cfg.activation == "swiglu":
+            layers["w_gate"] = norm(ks[7], l, e, d, f)
+        if cfg.shared_experts:
+            layers["ws_up"] = norm(ks[8], l, d, cfg.shared_experts * f)
+            layers["ws_down"] = norm(ks[9], l, cfg.shared_experts * f, d)
+    else:
+        f = cfg.d_ff
+        layers["w_up"] = norm(ks[5], l, d, f)
+        layers["w_down"] = norm(ks[6], l, f, d)
+        if cfg.activation == "swiglu":
+            layers["w_gate"] = norm(ks[7], l, d, f)
+    return {
+        "embed": norm(ks[10], cfg.vocab, d),
+        "layers": layers,
+        "final_norm": jnp.ones((d,), dt),
+        "lm_head": norm(ks[11], d, cfg.vocab),
+    }
+
+
+# ----------------------------------------------------------------- pieces
+
+def rmsnorm(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """x [..., S, H, dh]; positions [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           -1).astype(x.dtype)
+
+
+def _ffn_act(cfg, x, w):
+    if cfg.activation == "swiglu":
+        up = x @ w["w_up"]
+        gate = jax.nn.silu((x @ w["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+        return (up * gate) @ w["w_down"]
+    if cfg.activation == "squared_relu":
+        h = jax.nn.relu(x @ w["w_up"])
+        return (h * h) @ w["w_down"]
+    h = jax.nn.gelu((x @ w["w_up"]).astype(jnp.float32)).astype(x.dtype)
+    return h @ w["w_down"]
+
+
+def _softcap(x, cap):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def _embed_lookup(params, tokens, s_chunk: int = 4096):
+    """Embedding lookup.  Under a mesh (sharding hints active) this is a
+    one-hot matmul: GSPMD partitions the contraction over the
+    vocab-sharded table cleanly, whereas a gather from a sharded operand
+    lowers to full-activation all-reduces (and the VJP to a scatter-add
+    with operand-sized index tensors).  Long sequences are scanned in
+    chunks so the one-hot buffer stays bounded (unchunked, a 32k-token
+    prefill materializes T*V*2 bytes — 343 TB on kimi-k2).  Plain gather
+    on a single device."""
+    from repro.dist.hints import constrain, get_hints
+    if get_hints() is None:
+        return params["embed"][tokens]
+    v, d = params["embed"].shape
+
+    def chunk_lookup(tok):
+        oh = jax.nn.one_hot(tok, v, dtype=params["embed"].dtype)
+        oh = constrain(oh, "dp", None, "tp")
+        return oh @ params["embed"]
+
+    b, s = tokens.shape
+    if s <= s_chunk or s % s_chunk != 0:
+        return chunk_lookup(tokens)
+    tk = tokens.reshape(b, s // s_chunk, s_chunk).transpose(1, 0, 2)
+    out = jax.lax.map(chunk_lookup, tk)           # [n_chunk, B, s_chunk, D]
+    return out.transpose(1, 0, 2, 3).reshape(b, s, d)
+
+
+def attention(cfg: TransformerConfig, x, w, positions, *, is_local,
+              kv_cache=None, cache_pos=None):
+    """x [B, S, D].  Training/prefill when kv_cache is None; decode
+    (S==1) when kv_cache=(k [B,Hkv,Sc,dh], v) and cache_pos is a scalar.
+    Returns (out, new_cache)."""
+    b, s, d = x.shape
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ w["wq"]).reshape(b, s, h, dh)
+    k = (x @ w["wk"]).reshape(b, s, kvh, dh)
+    v = (x @ w["wv"]).reshape(b, s, kvh, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    scale = dh ** -0.5
+    rep = h // kvh
+
+    if kv_cache is None:
+        # causal (optionally banded, compute-skipped) flash attention
+        from repro.models.attention import flash_attention
+        out = flash_attention(q, k, v, causal=True,
+                              window=cfg.window if is_local else None,
+                              softcap=cfg.attn_softcap,
+                              q_chunk=min(512, s), k_chunk=min(1024, s))
+        return out.reshape(b, s, h * dh) @ w["wo"], (k, v)
+
+    # decode: append to cache, attend over (windowed) cache
+    ck, cv = kv_cache
+    sc = ck.shape[2]
+    ck = jax.lax.dynamic_update_slice(ck, k.transpose(0, 2, 1, 3),
+                                      (0, 0, cache_pos, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.transpose(0, 2, 1, 3),
+                                      (0, 0, cache_pos, 0))
+    if is_local and cfg.window < sc:
+        wdw = cfg.window
+        start = jnp.clip(cache_pos - wdw + 1, 0, sc - wdw)
+        ks_ = jax.lax.dynamic_slice(ck, (0, 0, start, 0),
+                                    (b, kvh, wdw, dh))
+        vs_ = jax.lax.dynamic_slice(cv, (0, 0, start, 0),
+                                    (b, kvh, wdw, dh))
+        kidx = start + jnp.arange(wdw)
+    else:
+        ks_, vs_ = ck, cv
+        kidx = jnp.arange(sc)
+    kf = jnp.repeat(ks_, rep, axis=1)
+    vf = jnp.repeat(vs_, rep, axis=1)
+    logits = jnp.einsum("bqhd,bhkd->bhqk", q, kf).astype(jnp.float32) * scale
+    logits = _softcap(logits, cfg.attn_softcap)
+    valid = kidx <= cache_pos
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, -1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bhkd->bqhd", p, vf)
+    return out.reshape(b, s, h * dh) @ w["wo"], (ck, cv)
+
+
+def _layer_is_local(cfg: TransformerConfig) -> jnp.ndarray:
+    if cfg.attn_type == "swa":
+        return jnp.ones((cfg.n_layers,), bool)
+    if cfg.attn_type == "local_global":
+        return jnp.arange(cfg.n_layers) % 2 == 0
+    return jnp.zeros((cfg.n_layers,), bool)
+
+
+def _block(cfg, x, w, positions, is_local, kv_cache=None, cache_pos=None):
+    a, new_cache = attention(cfg, rmsnorm(x, w["attn_norm"]), w, positions,
+                             is_local=is_local, kv_cache=kv_cache,
+                             cache_pos=cache_pos)
+    x = x + a
+    hnorm = rmsnorm(x, w["ffn_norm"])
+    if cfg.is_moe:
+        f = moe_ffn(cfg, hnorm, w)
+    else:
+        f = _ffn_act(cfg, hnorm, w)
+    return x + f, new_cache
+
+
+# ----------------------------------------------------------------- forward
+
+def forward(cfg: TransformerConfig, params, tokens, act_constraint=None,
+            final_constraint=None):
+    """tokens [B, S] -> logits [B, S, V] (bf16 matmul, fp32 softcap).
+
+    act_constraint pins the [B, S, D] activations (batch over dp) — the
+    scan carry otherwise inherits the embedding's D-sharding and GSPMD
+    replicates the batch dim."""
+    x = _embed_lookup(params, tokens)
+    if act_constraint is not None:
+        x = act_constraint(x)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    locals_ = _layer_is_local(cfg)
+
+    def body(x, layer):
+        w, is_local = layer
+        # both branches traced; mask selects (scan needs uniform body)
+        if cfg.attn_type == "full":
+            y, _ = _block(cfg, x, w, positions, is_local=False)
+        elif cfg.attn_type == "swa":
+            y, _ = _block(cfg, x, w, positions, is_local=True)
+        else:
+            y_loc, _ = _block(cfg, x, w, positions, is_local=True)
+            y_glob, _ = _block(cfg, x, w, positions, is_local=False)
+            y = jnp.where(is_local, y_loc, y_glob)
+        if act_constraint is not None:
+            y = act_constraint(y)
+        return y, None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, (params["layers"], locals_))
+    x = rmsnorm(x, params["final_norm"])
+    if final_constraint is not None:
+        # leave sequence-parallel layout before the vocab-parallel head:
+        # S(tp) x V(tp) on the same axis forces GSPMD to unshard V in the
+        # head gradient otherwise
+        x = final_constraint(x)
+    logits = x @ params["lm_head"]
+    return _softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+
+def lm_loss(cfg: TransformerConfig, params, tokens, labels,
+            logits_constraint=None, act_constraint=None,
+            final_constraint=None):
+    logits = forward(cfg, params, tokens, act_constraint=act_constraint,
+                     final_constraint=final_constraint)
+    if logits_constraint is not None:
+        logits = logits_constraint(logits)
+    # logsumexp-form CE: avoids materializing a second [.., V] logp buffer
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0] - lse
+    return -jnp.mean(ll)
+
+
+def train_step(cfg: TransformerConfig, opt, params, opt_state, tokens, labels,
+               n_microbatches: int = 1, mb_constraint=None,
+               logits_constraint=None, act_constraint=None,
+               grad_dtype=jnp.float32, grad_constraint=None,
+               final_constraint=None):
+    """Gradient-accumulated train step (tokens [B, S]).
+
+    mb_constraint / logits_constraint / act_constraint: optional sharding
+    constraints re-pinning the microbatch slice (batch over dp), the
+    logits (batch over dp, vocab over tp) and the layer activations —
+    GSPMD loses the batch sharding through the reshape+scan otherwise
+    and replicates the [T, V] logits.
+    """
+    loss_fn = partial(lm_loss, cfg, logits_constraint=logits_constraint,
+                      act_constraint=act_constraint,
+                      final_constraint=final_constraint)
+    if n_microbatches == 1:
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens, labels)
+    else:
+        b = tokens.shape[0]
+        mb = b // n_microbatches
+        tk = tokens.reshape(n_microbatches, mb, -1)
+        lb = labels.reshape(n_microbatches, mb, -1)
+
+        def acc_body(carry, xs):
+            g_acc, l_acc = carry
+            t, l = xs
+            if mb_constraint is not None:
+                t, l = mb_constraint(t), mb_constraint(l)
+            loss, g = jax.value_and_grad(loss_fn)(params, t, l)
+            if grad_constraint is not None:
+                g = grad_constraint(g)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(grad_dtype),
+                                 g_acc, g)
+            if grad_constraint is not None:
+                # the accumulator is a scan carry: re-pin it to the param
+                # shardings or GSPMD replicates it (17.6 GiB/device for
+                # the 340B lm_head grad alone)
+                g_acc = grad_constraint(g_acc)
+            return (g_acc, l_acc + loss), None
+
+        # grad_dtype=bf16 (with the optimizer's clipping) halves the
+        # accumulator footprint — required to fit the 1T config on a pod
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, grad_dtype), params)
+        if grad_constraint is not None:
+            zeros = grad_constraint(zeros)
+        (grads, loss), _ = jax.lax.scan(acc_body, (zeros, 0.0), (tk, lb))
+        grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+        loss = loss / n_microbatches
+    new_params, new_opt = opt.update(grads, opt_state, params)
+    return new_params, new_opt, loss
+
+
+# ----------------------------------------------------------------- serving
+
+def init_kv_cache(cfg: TransformerConfig, batch: int, max_seq: int):
+    dt = jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_seq, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def prefill(cfg: TransformerConfig, params, tokens):
+    """tokens [B, S] -> (logits [B, V] for last position, kv cache)."""
+    x = _embed_lookup(params, tokens)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    locals_ = _layer_is_local(cfg)
+
+    def body(x, layer):
+        w, is_local = layer
+        if cfg.attn_type == "full":
+            y, kvc = _block(cfg, x, w, positions, is_local=False)
+        elif cfg.attn_type == "swa":
+            y, kvc = _block(cfg, x, w, positions, is_local=True)
+        else:
+            y_loc, kvc = _block(cfg, x, w, positions, is_local=True)
+            y_glob, _ = _block(cfg, x, w, positions, is_local=False)
+            y = jnp.where(is_local, y_loc, y_glob)
+        k, v = kvc
+        return y, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], locals_))
+    x = rmsnorm(x[:, -1], params["final_norm"])
+    logits = _softcap((x @ params["lm_head"]).astype(jnp.float32),
+                      cfg.final_softcap)
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_step(cfg: TransformerConfig, params, token, cache, cache_pos):
+    """token [B, 1]; cache {'k','v'} [L, B, Hkv, S, dh]; cache_pos scalar
+    int32 (same position across batch).  Returns (logits [B, V], cache)."""
+    x = params["embed"][token]
+    positions = jnp.full((1, 1), cache_pos, jnp.int32)
+    locals_ = _layer_is_local(cfg)
+
+    def body(x, layer):
+        w, is_local, ck, cv = layer
+        if cfg.attn_type == "full":
+            y, (nk, nv) = _block(cfg, x, w, positions, is_local=False,
+                                 kv_cache=(ck, cv), cache_pos=cache_pos)
+        elif cfg.attn_type == "swa":
+            y, (nk, nv) = _block(cfg, x, w, positions, is_local=True,
+                                 kv_cache=(ck, cv), cache_pos=cache_pos)
+        else:
+            y_loc, (nk, nv) = _block(cfg, x, w, positions, is_local=True,
+                                     kv_cache=(ck, cv), cache_pos=cache_pos)
+            y_glob, _ = _block(cfg, x, w, positions, is_local=False,
+                               kv_cache=(ck, cv), cache_pos=cache_pos)
+            y = jnp.where(is_local, y_loc, y_glob)
+        return y, (nk, nv)
+
+    x, (nks, nvs) = jax.lax.scan(
+        body, x, (params["layers"], locals_, cache["k"], cache["v"]))
+    x = rmsnorm(x[:, -1], params["final_norm"])
+    logits = _softcap((x @ params["lm_head"]).astype(jnp.float32),
+                      cfg.final_softcap)
+    return logits, {"k": nks, "v": nvs}

@@ -1,0 +1,1 @@
+from repro.optim.optimizers import adafactor, adam, sgd  # noqa: F401

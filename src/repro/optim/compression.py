@@ -1,0 +1,102 @@
+"""Gradient compression for the slow (cross-pod / DCN) axis.
+
+Two schemes, both with error feedback so compression error is carried,
+not lost:
+
+  * int8 stochastic-rounding quantization (8x byte reduction on the
+    wire): q = round_s(g/scale), all-reduce int32-accumulated, dequant.
+  * top-k magnitude sparsification (send k values + indices).
+
+Used by the runtime when ``config.grad_compression`` is set; the roofline
+collective term scales down accordingly (§Perf logs the before/after).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array, key: jax.Array):
+    """Symmetric per-tensor int8 with stochastic rounding."""
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    x = g / scale
+    lo = jnp.floor(x)
+    p = x - lo
+    r = jax.random.uniform(key, g.shape)
+    q = (lo + (r < p)).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_int8(g: jax.Array, key: jax.Array, axis: str):
+    """Quantize -> psum (int32 accumulate) -> dequant.  Scales are
+    max-reduced so every participant dequantizes consistently."""
+    scale = jax.lax.pmax(jnp.max(jnp.abs(g)) / 127.0 + 1e-12, axis)
+    x = g / scale
+    lo = jnp.floor(x)
+    p = x - lo
+    r = jax.random.uniform(key, g.shape)
+    q = (lo + (r < p)).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis)
+    return total.astype(jnp.float32) * scale
+
+
+def topk_sparsify(g: jax.Array, k: int):
+    """Flatten, keep k largest-|.|, return (values, indices, residual)."""
+    flat = g.reshape(-1)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = flat[idx]
+    residual = flat.at[idx].set(0.0).reshape(g.shape)
+    return kept, idx, residual
+
+
+def topk_densify(vals: jax.Array, idx: jax.Array, shape) -> jax.Array:
+    size = 1
+    for s in shape:
+        size *= s
+    return jnp.zeros((size,), vals.dtype).at[idx].add(vals).reshape(shape)
+
+
+class ErrorFeedback:
+    """Carry compression residuals across steps: g_eff = g + e_{t-1};
+    e_t = g_eff - decompress(compress(g_eff))."""
+
+    @staticmethod
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    @staticmethod
+    def apply(grads, errors, compress_fn):
+        """compress_fn(g) -> (g_hat, new_error); returns (g_hats, errors)."""
+        out = jax.tree.map(lambda g, e: compress_fn(g + e), grads, errors,
+                           is_leaf=lambda x: isinstance(x, jnp.ndarray))
+        g_hat = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_e = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return g_hat, new_e
+
+
+def make_topk_compressor(frac: float):
+    def compress(g):
+        k = max(1, int(g.size * frac))
+        vals, idx, residual = topk_sparsify(g, k)
+        g_hat = topk_densify(vals, idx, g.shape)
+        return g_hat, residual
+    return compress
+
+
+def make_int8_compressor(key: jax.Array):
+    holder = {"key": key}
+
+    def compress(g):
+        holder["key"], sub = jax.random.split(holder["key"])
+        q, scale = quantize_int8(g, sub)
+        g_hat = dequantize_int8(q, scale)
+        return g_hat, g - g_hat
+    return compress

@@ -1,0 +1,138 @@
+"""Functional optimizers (init/update pairs), optax-free.
+
+adafactor exists because the 340B/1T configs cannot afford 8 bytes/param
+of Adam state on 16 GiB chips — factored second moments cut optimizer
+state to ~2 bytes/param + O(rows+cols), which is what makes the kimi-k2
+dry-run fit (see DESIGN §6)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params):
+        if momentum == 0.0:
+            new_p = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+            return new_p, state
+        new_m = jax.tree.map(lambda m, g: momentum * m + g, state, grads)
+        new_p = jax.tree.map(lambda p, m: p - lr * m, params, new_m)
+        return new_p, new_m
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         lr_fn: Callable[[jax.Array], jax.Array] | None = None) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(jnp.zeros_like, params),
+            "v": jax.tree.map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        step_lr = lr_fn(t) if lr_fn is not None else lr
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new_p = jax.tree.map(
+            lambda p, m_, v_: p - step_lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps),
+            params, m, v)
+        return new_p, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: float = 1e-2, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second moments for matrices; full for vectors/scalars."""
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return {"s": jax.tree.map(leaf, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        beta2 = 1.0 - t.astype(jnp.float32) ** -0.8
+
+        def leaf(g, s, p):
+            # row/col second moments via f32-accumulated reductions — no
+            # materialized f32 copy of g (a [L, D, F] f32 temp per leaf is
+            # ~2 GiB/device on the 340B/1T configs)
+            n_last = g.shape[-1] if g.ndim else 1
+            if _factored(p.shape):
+                g2r = jnp.einsum("...rc,...rc->...r", g, g,
+                                 preferred_element_type=jnp.float32) / n_last
+                g2c = jnp.einsum("...rc,...rc->...c", g, g,
+                                 preferred_element_type=jnp.float32) / g.shape[-2]
+                vr = beta2 * s["vr"] + (1 - beta2) * (g2r + eps)
+                vc = beta2 * s["vc"] + (1 - beta2) * (g2c + eps)
+                # rank-1 reconstruction of the second moment
+                denom = vr[..., :, None] * vc[..., None, :] / jnp.maximum(
+                    vr.mean(-1)[..., None, None], eps)
+                scale = jax.lax.rsqrt(jnp.maximum(denom, eps))
+                rms2 = jnp.einsum("...rc,...rc->", g, g * scale.astype(g.dtype) ** 2,
+                                  preferred_element_type=jnp.float32) / float(g.size)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                g32 = g.astype(jnp.float32)
+                v = beta2 * s["v"] + (1 - beta2) * (g32 * g32 + eps)
+                scale = jax.lax.rsqrt(jnp.maximum(v, eps))
+                rms2 = jnp.mean((g32 * scale) ** 2)
+                new_s = {"v": v}
+            clip = jnp.maximum(1.0, jnp.sqrt(rms2 + eps) / clip_threshold)
+            upd = (g * scale.astype(g.dtype)) / clip.astype(g.dtype)
+            return (p - lr * upd).astype(p.dtype), new_s
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["s"])
+        out = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_s = tdef.unflatten([o[1] for o in out])
+        return new_p, {"s": new_s, "t": t}
+
+    return Optimizer(init, update)
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmupLinearLR:
+    """LR ramp used with the large-batch schedule (paper §7.1 pairs the
+    warm-up batch with linearly-scaled LR)."""
+    peak_lr: float
+    warmup_steps: int
+
+    def __call__(self, t: jax.Array) -> jax.Array:
+        tf = t.astype(jnp.float32)
+        return self.peak_lr * jnp.minimum(1.0, tf / max(self.warmup_steps, 1))
+
+
+def global_norm_clip(grads, max_norm: float):
+    norm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm

@@ -1,0 +1,81 @@
+"""Fault-tolerant training loop.
+
+Design: the entire training state (params, opt state, loader state, rng)
+is one pytree; the step is a pure function of it.  Fault tolerance is
+therefore exactly (a) periodic atomic checkpoints, (b) on start, resume
+from the latest committed step, (c) on failure, the supervisor re-launches
+the same binary and (b) takes over — the loop below is that logic.
+
+Straggler mitigation: SPMD training has no per-worker skew knob inside a
+step, so mitigation lives at the step boundary — a per-step deadline; a
+step exceeding it is recorded, and after ``max_strays`` consecutive slow
+steps the loop requests re-layout (in production: evict the slow host /
+re-shard; here: callback + log, and the elastic restore path covers the
+re-shard).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    max_steps: int = 200
+    step_deadline_s: float | None = None
+    max_strays: int = 3
+    async_ckpt: bool = True
+
+
+@dataclasses.dataclass
+class LoopReport:
+    steps_run: int
+    resumed_from: int | None
+    stray_steps: int
+    relayout_requests: int
+    losses: list
+
+
+def run_training(cfg: LoopConfig, init_state: Any,
+                 step_fn: Callable[[Any, int], tuple[Any, float]],
+                 on_relayout: Callable[[Any], Any] | None = None) -> LoopReport:
+    """step_fn(state, step) -> (state, loss).  Resumes if a checkpoint
+    exists; checkpoints every ``ckpt_every``; final state saved at end."""
+    start = 0
+    state = init_state
+    resumed = None
+    if latest_step(cfg.ckpt_dir) is not None:
+        state, start = restore_checkpoint(cfg.ckpt_dir, init_state)
+        resumed = start
+    strays = 0
+    relayouts = 0
+    losses = []
+    pending = None
+    for step in range(start, cfg.max_steps):
+        t0 = time.perf_counter()
+        state, loss = step_fn(state, step)
+        dt = time.perf_counter() - t0
+        losses.append(float(loss))
+        if cfg.step_deadline_s is not None and dt > cfg.step_deadline_s:
+            strays += 1
+            if strays >= cfg.max_strays:
+                relayouts += 1
+                strays = 0
+                if on_relayout is not None:
+                    state = on_relayout(state)
+        else:
+            strays = 0
+        if (step + 1) % cfg.ckpt_every == 0:
+            if pending is not None:
+                pending.join()
+            pending = save_checkpoint(cfg.ckpt_dir, step + 1, state,
+                                      async_=cfg.async_ckpt)
+    if pending is not None:
+        pending.join()
+    save_checkpoint(cfg.ckpt_dir, cfg.max_steps, state)
+    return LoopReport(cfg.max_steps - start, resumed, strays, relayouts, losses)

@@ -1,0 +1,172 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes + no NaNs (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as config_registry
+from repro.optim import adam
+
+LM_ARCHS = ["nemotron_4_340b", "gemma2_2b", "granite_3_8b", "mixtral_8x7b",
+            "kimi_k2_1t_a32b"]
+RECSYS_ARCHS = ["deepfm", "xdeepfm", "dlrm_rm2"]
+
+
+def _finite(tree):
+    return all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(tree)
+               if jnp.issubdtype(l.dtype, jnp.floating))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_and_serve(arch):
+    from repro.models import transformer as tfm
+    cfg = config_registry.get(arch).SMOKE
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    logits = tfm.forward(cfg, params, toks)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert _finite(logits)
+    opt = adam(1e-3)
+    p2, _, loss = tfm.train_step(cfg, opt, params, opt.init(params),
+                                 toks, toks, n_microbatches=2)
+    assert jnp.isfinite(loss)
+    assert _finite(p2)
+    lg, cache = tfm.prefill(cfg, params, toks)
+    assert lg.shape == (2, cfg.vocab)
+    c = tfm.init_kv_cache(cfg, 2, 24)
+    lg2, c2 = tfm.decode_step(cfg, params, toks[:, :1], c, jnp.int32(0))
+    assert lg2.shape == (2, cfg.vocab) and _finite(lg2)
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs must carry the exact assigned hyperparameters."""
+    n = config_registry.get("nemotron_4_340b").FULL
+    assert (n.n_layers, n.d_model, n.n_heads, n.n_kv_heads, n.d_ff,
+            n.vocab) == (96, 18432, 96, 8, 73728, 256000)
+    assert n.activation == "squared_relu"
+    g = config_registry.get("gemma2_2b").FULL
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads, g.d_ff,
+            g.vocab) == (26, 2304, 8, 4, 9216, 256000)
+    assert g.attn_type == "local_global" and g.attn_softcap == 50.0
+    m = config_registry.get("mixtral_8x7b").FULL
+    assert (m.n_experts, m.top_k, m.moe_d_ff) == (8, 2, 14336)
+    assert m.attn_type == "swa"
+    k = config_registry.get("kimi_k2_1t_a32b").FULL
+    assert (k.n_layers, k.d_model, k.n_heads, k.n_experts, k.top_k) == \
+        (61, 7168, 64, 384, 8)
+    # ~1T total, ~32B active
+    assert 0.9e12 < k.param_count() < 1.2e12
+    assert 25e9 < k.active_param_count() < 40e9
+    assert 300e9 < n.param_count() < 380e9
+
+
+def test_gcn_smoke_all_shapes():
+    from repro.models import gcn
+    cfg = config_registry.get("gcn_cora").SMOKE
+    rng = np.random.default_rng(0)
+    params = gcn.init_params(cfg, jax.random.PRNGKey(0))
+    # full graph
+    from repro.core.graph import from_numpy
+    src = rng.integers(0, 50, 300).astype(np.int32)
+    dst = rng.integers(0, 50, 300).astype(np.int32)
+    g = from_numpy(src, dst, 50)
+    x = jnp.asarray(rng.standard_normal((50, cfg.d_feat)).astype(np.float32))
+    logits = gcn.forward(cfg, params, g, x)
+    assert logits.shape == (50, cfg.n_classes) and _finite(logits)
+    # one train step reduces loss on random labels (overfit direction)
+    labels = jnp.asarray(rng.integers(0, cfg.n_classes, 50).astype(np.int32))
+    lmask = jnp.ones((50,), jnp.float32)
+    loss0, grads = jax.value_and_grad(
+        lambda p: gcn.loss_fn(cfg, p, g, x, labels, lmask))(params)
+    p2 = jax.tree.map(lambda p, gr: p - 0.5 * gr, params, grads)
+    loss1 = gcn.loss_fn(cfg, p2, g, x, labels, lmask)
+    assert float(loss1) < float(loss0)
+    # batched molecule-style
+    gids = jnp.asarray(np.repeat(np.arange(5), 10).astype(np.int32))
+    out = gcn.forward_batched(cfg, params, jnp.asarray(src[:40] % 50),
+                              jnp.asarray(dst[:40] % 50),
+                              jnp.ones(40, bool), x, gids, 5)
+    assert out.shape == (5, cfg.n_classes) and _finite(out)
+
+
+@pytest.mark.parametrize("arch", RECSYS_ARCHS)
+def test_recsys_smoke(arch):
+    from repro.models import recsys_models as rm
+    mod = config_registry.get(arch)
+    cfg = mod.SMOKE
+    key = jax.random.PRNGKey(0)
+    rng = np.random.default_rng(0)
+    b = 16
+    if arch == "dlrm_rm2":
+        params = rm.dlrm_init(cfg, key)
+        dense = jnp.asarray(rng.standard_normal((b, cfg.n_dense)).astype(np.float32))
+        ids = jnp.asarray(rng.integers(0, cfg.vocab, (b, cfg.n_sparse)).astype(np.int32))
+        out = rm.dlrm_forward(cfg, params, dense, ids)
+        feats = (dense, ids)
+        fwd = lambda p: rm.dlrm_forward(cfg, p, *feats)
+    else:
+        init = rm.deepfm_init if arch == "deepfm" else rm.xdeepfm_init
+        f = rm.deepfm_forward if arch == "deepfm" else rm.xdeepfm_forward
+        params = init(cfg, key)
+        ids = jnp.asarray(rng.integers(0, cfg.vocab, (b, cfg.n_sparse)).astype(np.int32))
+        out = f(cfg, params, ids)
+        fwd = lambda p: f(cfg, p, ids)
+    assert out.shape == (b,) and _finite(out)
+    labels = jnp.asarray(rng.integers(0, 2, b).astype(np.float32))
+    loss0, grads = jax.value_and_grad(
+        lambda p: rm.bce_loss(fwd(p), labels))(params)
+    assert jnp.isfinite(loss0) and _finite(grads)
+
+
+def test_bert4rec_smoke():
+    from repro.models import recsys_models as rm
+    cfg = config_registry.get("bert4rec").SMOKE
+    params = rm.bert4rec_init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    b, s, m, n = 4, cfg.seq_len, 3, 8
+    seq = jnp.asarray(rng.integers(0, cfg.n_items, (b, s)).astype(np.int32))
+    smask = jnp.ones((b, s), bool)
+    hid = rm.bert4rec_encode(cfg, params, seq, smask)
+    assert hid.shape == (b, s, cfg.embed_dim) and _finite(hid)
+    mpos = jnp.asarray(rng.integers(0, s, (b, m)).astype(np.int32))
+    labels = jnp.asarray(rng.integers(0, cfg.n_items, (b, m)).astype(np.int32))
+    negs = jnp.asarray(rng.integers(0, cfg.n_items, (b, m, n)).astype(np.int32))
+    loss = rm.bert4rec_sampled_loss(cfg, params, seq, smask, mpos, labels, negs)
+    assert jnp.isfinite(loss)
+    cand = jnp.arange(cfg.n_items, dtype=jnp.int32)
+    scores = rm.bert4rec_retrieve(cfg, params, seq, smask, cand)
+    assert scores.shape == (b, cfg.n_items) and _finite(scores)
+    u, slate = rm.bert4rec_serve(cfg, params, seq, smask, cand[None, :16]
+                                 .repeat(b, 0))
+    assert u.shape == (b, cfg.embed_dim) and slate.shape == (b, 16)
+
+
+def test_dlrm_retrieval_matches_forward():
+    """retrieval_cand path (swap field 1) must equal running the model
+    batched with the candidate id substituted."""
+    from repro.models import recsys_models as rm
+    cfg = config_registry.get("dlrm_rm2").SMOKE
+    params = rm.dlrm_init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    dense = jnp.asarray(rng.standard_normal((1, cfg.n_dense)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, cfg.vocab, (1, cfg.n_sparse)).astype(np.int32))
+    cand = jnp.asarray(rng.integers(0, cfg.vocab, 7).astype(np.int32))
+    fast = rm.dlrm_retrieve(cfg, params, dense, ids, cand)
+    slow = []
+    for c in np.asarray(cand):
+        ids2 = ids.at[0, 0].set(int(c))
+        slow.append(float(rm.dlrm_forward(cfg, params,
+                                          dense, ids2)[0]))
+    np.testing.assert_allclose(fast, np.array(slow), rtol=1e-4, atol=1e-5)
+
+
+def test_all_archs_and_cells_enumerate():
+    """Every assigned arch has 4 shapes (incl skips) and configs import."""
+    total = 0
+    for arch in config_registry.ASSIGNED:
+        mod = config_registry.get(arch)
+        n = len(mod.SHAPES) + len(mod.SKIP)
+        assert n == 4, f"{arch}: {n} cells"
+        total += n
+    assert total == 40

@@ -1,0 +1,216 @@
+"""Core behaviour tests: dataflow-opt equivalence, models, BPR, planner,
+data pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bpr, lightgcn, ngcf
+from repro.core.graph import bipartite_from_numpy
+from repro.core.large_batch import LargeBatchSchedule
+from repro.core.message_passing import bipartite_sym_coeff
+from repro.core.tiered_memory import (AccessProfile, gnn_recsys_profiles,
+                                      plan_placement, plan_placement_exact)
+from repro.data import kronecker, synth
+from repro.data.loader import EdgeLoader
+from repro.data.sampler import build_csr, sample_blocks, subgraph_redundancy
+
+
+def small_graph(nu=12, ni=9, e=40, seed=0, e_pad=None):
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, nu, e).astype(np.int32)
+    i = rng.integers(0, ni, e).astype(np.int32)
+    return bipartite_from_numpy(u, i, nu, ni, e_pad=e_pad)
+
+
+# ---------------------------------------------------------------- dataflow
+@pytest.mark.parametrize("level_pair", [(0, 1), (1, 3), (2, 3)])
+def test_ngcf_opt_levels_equivalent(level_pair):
+    """Paper §4: O1/O2/O3 are exact rewrites (O0 differs only by float
+    reassociation)."""
+    g = small_graph()
+    params = ngcf.init_params(jax.random.PRNGKey(0), g.n_users, g.n_items, 16, 2)
+    a, b = level_pair
+    ua, ia = ngcf.forward(params, g, opt_level=a)
+    ub, ib = ngcf.forward(params, g, opt_level=b)
+    np.testing.assert_allclose(ua, ub, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(ia, ib, rtol=2e-4, atol=2e-5)
+
+
+def test_ngcf_output_shape_and_finite():
+    g = small_graph()
+    params = ngcf.init_params(jax.random.PRNGKey(1), g.n_users, g.n_items, 8, 3)
+    u, i = ngcf.forward(params, g)
+    assert u.shape == (g.n_users, 8 * 4) and i.shape == (g.n_items, 8 * 4)
+    assert jnp.isfinite(u).all() and jnp.isfinite(i).all()
+
+
+def test_lightgcn_respects_padding():
+    """Padded edges must not contribute: compare padded vs unpadded graph."""
+    g1 = small_graph(e_pad=64)
+    g2 = small_graph(e_pad=None)
+    params = lightgcn.init_params(jax.random.PRNGKey(2), g1.n_users, g1.n_items, 8, 2)
+    u1, i1 = lightgcn.forward(params, g1)
+    u2, i2 = lightgcn.forward(params, g2)
+    np.testing.assert_allclose(u1, u2, rtol=1e-6)
+    np.testing.assert_allclose(i1, i2, rtol=1e-6)
+
+
+def test_sym_coeff_masks_padding():
+    g = small_graph(e_pad=64)
+    c = bipartite_sym_coeff(g)
+    assert c.shape == (64,)
+    assert (np.asarray(c)[40:] == 0).all()
+    assert (np.asarray(c)[:40] > 0).all()
+
+
+# ---------------------------------------------------------------- training
+def test_bpr_training_reduces_loss():
+    """A few LightGCN BPR steps on a tiny graph must reduce the loss."""
+    g = small_graph(nu=30, ni=20, e=200)
+    params = lightgcn.init_params(jax.random.PRNGKey(3), 30, 20, 16, 2)
+    rng = np.random.default_rng(0)
+    tu, ti = np.asarray(g.user)[:200], np.asarray(g.item)[:200]
+
+    @jax.jit
+    def loss_fn(p, users, pos, neg):
+        ue, ie = lightgcn.forward(p, g)
+        return bpr.bpr_loss(ue, ie, users, pos, neg)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    batch = bpr.sample_bpr_batch(rng, tu, ti, 20, 64)
+    l0, _ = grad_fn(params, *[jnp.asarray(b) for b in batch])
+    lr = 0.05
+    for _ in range(30):
+        b = [jnp.asarray(x) for x in bpr.sample_bpr_batch(rng, tu, ti, 20, 64)]
+        _, grads = grad_fn(params, *b)
+        params = jax.tree.map(
+            lambda p, gr: p - lr * gr if isinstance(p, jnp.ndarray) else p,
+            params, grads)
+    l1, _ = grad_fn(params, *[jnp.asarray(x) for x in batch])
+    assert float(l1) < float(l0)
+
+
+def test_recall_at_k_perfect_and_zero():
+    ue = np.eye(3, dtype=np.float32)
+    ie = np.eye(3, dtype=np.float32)
+    train_mask = np.zeros((3, 3), bool)
+    test_pos = [np.array([0]), np.array([1]), np.array([2])]
+    assert bpr.recall_at_k(ue, ie, train_mask, test_pos, k=1) == 1.0
+    anti = [np.array([1]), np.array([2]), np.array([0])]
+    assert bpr.recall_at_k(ue, ie, train_mask, anti, k=1) == 0.0
+
+
+def test_large_batch_schedule_matches_paper():
+    s = LargeBatchSchedule(base_lr=1e-4, base_batch=1000, target_batch=150_000)
+    assert s.batch_for_epoch(0) == 15_000      # paper: warm-up = target/10
+    assert s.batch_for_epoch(1) == 15_000
+    assert s.batch_for_epoch(2) == 150_000
+    assert s.linear_scaled_lr(150_000) == pytest.approx(1e-4 * 150)
+    assert s.sqrt_scaled_lr(150_000) == pytest.approx(1e-4 * 150 ** 0.5)
+
+
+# ---------------------------------------------------------------- planner
+def test_planner_prefers_write_heavy_in_hbm():
+    """Write-intensive tensors (SDDMM messages) must win HBM residency over
+    read-only same-size tensors when capacity is tight — the Fig 8
+    asymmetry."""
+    writey = AccessProfile("messages", 100, reads_per_step=1, writes_per_step=3)
+    ready = AccessProfile("graph", 100, reads_per_step=4, writes_per_step=0)
+    plan = plan_placement([writey, ready], hbm_budget=100)
+    assert plan.tier("messages") == "hbm"
+    assert plan.tier("graph") == "host"
+
+
+def test_planner_greedy_matches_exact():
+    profiles = gnn_recsys_profiles(1000, 800, 20_000, 64, 3)
+    budget = sum(p.nbytes for p in profiles) // 3
+    greedy = plan_placement(profiles, hbm_budget=budget)
+    exact = plan_placement_exact(profiles, hbm_budget=budget)
+    assert greedy.est_step_penalty_s <= exact.est_step_penalty_s * 1.05
+
+
+def test_planner_memory_model_matches_paper_scale():
+    """Paper §2.1: 1M vertices / 300M edges / 3 layers / dim 128 ≈ 500 GB."""
+    profiles = gnn_recsys_profiles(500_000, 500_000, 300_000_000, 128, 3)
+    total = sum(p.nbytes for p in profiles)
+    assert 300e9 < total < 800e9  # same order as the paper's 500 GB
+
+
+def test_planner_raises_when_pinned_exceeds_budget():
+    p = AccessProfile("x", 1000, pinned="hbm")
+    with pytest.raises(MemoryError):
+        plan_placement([p], hbm_budget=10)
+
+
+# ---------------------------------------------------------------- data
+def test_synth_density_matches_request():
+    d = synth.generate_bipartite(500, 400, 5000, seed=1)
+    assert d.n_edges > 4500
+    assert abs(d.density - 5000 / (500 * 400)) < 0.01
+
+
+def test_power_law_degree_distribution():
+    d = synth.generate_bipartite(2000, 1500, 30_000, seed=2)
+    deg = np.bincount(d.item, minlength=1500)
+    top1pct = np.sort(deg)[-15:].sum()
+    assert top1pct > 0.1 * d.n_edges  # heavy head, like paper Fig 13
+
+
+def test_kronecker_expansion_preserves_density_and_count():
+    base = synth.generate_bipartite(100, 80, 1000, seed=3)
+    out = kronecker.expand_by_factor(base, 25, seed=0)
+    assert out.n_edges == base.n_edges * 25
+    assert out.n_users == 5 * 100 and out.n_items == 5 * 80
+    assert out.density == pytest.approx(base.density, rel=1e-6)
+
+
+def test_train_test_split_disjoint():
+    d = synth.generate_bipartite(100, 80, 1000, seed=4)
+    tr, te = synth.train_test_split(d, 0.1, seed=0)
+    assert tr.n_edges + te.n_edges == d.n_edges
+    k1 = set(zip(tr.user.tolist(), tr.item.tolist()))
+    k2 = set(zip(te.user.tolist(), te.item.tolist()))
+    assert not (k1 & k2)
+
+
+def test_loader_resumable():
+    u = np.arange(100, dtype=np.int32)
+    it = np.arange(100, dtype=np.int32)
+    a = EdgeLoader(u, it, batch=16, seed=7)
+    next(a); next(a)
+    st = a.state_dict()
+    b1 = next(a)
+    b = EdgeLoader(u, it, batch=16, seed=7)
+    b.load_state_dict(st)
+    b2 = next(b)
+    np.testing.assert_array_equal(b1[0], b2[0])
+
+
+def test_loader_shards_partition():
+    u = np.arange(100, dtype=np.int32)
+    seen = []
+    for s in range(4):
+        l = EdgeLoader(u, u, batch=25, seed=1, shard_id=s, num_shards=4,
+                       drop_last=False)
+        seen.append(next(l)[0])
+    allv = np.concatenate(seen)
+    assert len(np.unique(allv)) == 100
+
+
+def test_sampler_fanout_and_redundancy():
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 200, 2000).astype(np.int32)
+    dst = rng.integers(0, 200, 2000).astype(np.int32)
+    g = build_csr(src, dst, 200)
+    blocks = sample_blocks(g, np.arange(8, dtype=np.int32), [10, 5], rng)
+    assert len(blocks) == 2
+    # deepest-first: last block's dst must be the seeds
+    np.testing.assert_array_equal(np.sort(blocks[-1].dst_nodes), np.arange(8))
+    # fanout respected: hop-1 block (last after reversal) uses fanouts[0]
+    assert blocks[-1].edge_mask.sum() <= 8 * 10
+    # deepest block (first) uses fanouts[1] over its own frontier
+    assert blocks[0].edge_mask.sum() <= blocks[0].n_dst * 5
+    # redundancy metric across two overlapping batches > 1
+    b2 = sample_blocks(g, np.arange(4, 12, dtype=np.int32), [10, 5], rng)
+    assert subgraph_redundancy([blocks, b2]) > 1.0

@@ -1,0 +1,146 @@
+"""Launch-layer tests: cell builders lower on a small mesh (subprocess),
+analytic cost model sanity, roofline parsing."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def run_with_devices(code: str, n: int = 8):
+    prog = f"import os\nos.environ['XLA_FLAGS'] = " \
+           f"'--xla_force_host_platform_device_count={n}'\n" + \
+           "import sys; sys.path.insert(0, 'src')\n" + textwrap.dedent(code)
+    res = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, timeout=420, cwd="/root/repo")
+    if res.returncode != 0:
+        raise AssertionError(f"subprocess failed:\n{res.stdout[-2000:]}\n"
+                             f"{res.stderr[-3000:]}")
+    return res.stdout
+
+
+def test_gnn_and_recsys_cells_lower_on_small_mesh():
+    out = run_with_devices("""
+        import jax
+        from repro.launch.mesh import make_mesh
+        from repro.launch import cells as cb
+        mesh = make_mesh((2, 4), ("data", "model"))
+        for arch, shape in [("gcn-cora", "full_graph_sm"),
+                            ("deepfm", "serve_p99"),
+                            ("bert4rec", "retrieval_cand")]:
+            cell = cb.build_cell(arch, shape, mesh)
+            with mesh:
+                c = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                            out_shardings=cell.out_shardings,
+                            donate_argnums=cell.donate).lower(*cell.args).compile()
+            assert c.memory_analysis().temp_size_in_bytes >= 0
+            print(f"{arch}/{shape} OK")
+        print("CELLS_OK")
+    """)
+    assert "CELLS_OK" in out
+
+
+def test_cell_skip_raises():
+    out = run_with_devices("""
+        from repro.launch.mesh import make_mesh
+        from repro.launch import cells as cb
+        mesh = make_mesh((2, 4), ("data", "model"))
+        try:
+            cb.build_cell("nemotron-4-340b", "long_500k", mesh)
+            raise SystemExit("should have raised")
+        except ValueError as e:
+            assert "skipped" in str(e)
+        print("SKIP_OK")
+    """)
+    assert "SKIP_OK" in out
+
+
+def test_input_specs_are_abstract():
+    """input_specs must be allocation-free ShapeDtypeStructs."""
+    out = run_with_devices("""
+        import jax
+        from repro.launch.mesh import make_mesh
+        from repro.launch.cells import input_specs
+        mesh = make_mesh((2, 4), ("data", "model"))
+        specs = input_specs("gcn-cora", "molecule", mesh)
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct), type(leaf)
+        print("SPECS_OK")
+    """)
+    assert "SPECS_OK" in out
+
+
+# --------------------------------------------------------------- analytic
+def test_analytic_flops_scale_with_tokens():
+    from repro import configs
+    from repro.launch.analytic import lm_train_cost
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+    cfg = configs.get("granite_3_8b").FULL
+    a = lm_train_cost(cfg, dict(global_batch=256, seq_len=4096,
+                                microbatches=4), FakeMesh())
+    b = lm_train_cost(cfg, dict(global_batch=512, seq_len=4096,
+                                microbatches=4), FakeMesh())
+    assert b["flops"] == pytest.approx(2 * a["flops"], rel=0.01)
+
+
+def test_analytic_banded_attention_cheaper():
+    from repro import configs
+    from repro.launch.analytic import lm_prefill_cost
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+    full = configs.get("granite_3_8b").FULL       # full attention
+    swa = configs.get("mixtral_8x7b").FULL        # SWA 4096
+    sh = dict(global_batch=32, seq_len=32768)
+    f = lm_prefill_cost(full, sh, FakeMesh())
+    s = lm_prefill_cost(swa, sh, FakeMesh())
+    # attention FLOPs per layer must be much lower for the banded arch
+    from repro.launch.analytic import _attn_flops_per_layer, _s_vis
+    af = _attn_flops_per_layer(full, 32, 32768, _s_vis(full, 32768))
+    asw = _attn_flops_per_layer(swa, 32, 32768, _s_vis(swa, 32768))
+    assert asw < af / 4
+
+
+def test_analytic_moe_vs_dense_active():
+    from repro import configs
+    mix = configs.get("mixtral_8x7b").FULL
+    assert mix.active_param_count() < 0.35 * mix.param_count()
+    kimi = configs.get("kimi_k2_1t_a32b").FULL
+    assert kimi.active_param_count() < 0.05 * kimi.param_count()
+
+
+# --------------------------------------------------------------- roofline
+def test_collective_bytes_parser():
+    from repro.launch.roofline import collective_bytes
+    hlo = """
+      %ag = f32[128,256]{1,0} all-gather(%p0), replica_groups=[4]<=[4]
+      %ar.1 = bf16[64]{0} all-reduce(%x), to_apply=%add
+      %cp = f32[8,8]{1,0} collective-permute(%y), source_target_pairs={{0,1}}
+      %dot = f32[128,128]{1,0} dot(%a, %b)
+    """
+    st = collective_bytes(hlo)
+    assert st.by_kind["all-gather"] == 128 * 256 * 4
+    assert st.by_kind["all-reduce"] == 64 * 2
+    assert st.by_kind["collective-permute"] == 8 * 8 * 4
+    assert st.total_bytes == 128 * 256 * 4 + 128 + 256
+
+
+def test_roofline_bottleneck_selection():
+    from repro.launch.roofline import Roofline, analyze
+
+    class FakeCompiled:
+        def cost_analysis(self):
+            return {"flops": 1e15, "bytes accessed": 1e9}
+
+        def as_text(self):
+            return "%ar = f32[1024]{0} all-reduce(%x)"
+
+    r = analyze(FakeCompiled(), n_chips=256)
+    assert r.bottleneck == "compute"
+    r2 = analyze(FakeCompiled(), n_chips=256,
+                 analytic=dict(flops=1.0, hbm_bytes=1e15, coll_bytes=0.0))
+    assert r2.bottleneck == "memory"

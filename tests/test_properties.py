@@ -1,0 +1,114 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import sparse_ops
+from repro.core.graph import bipartite_from_numpy
+from repro.core.large_batch import LargeBatchSchedule
+from repro.core.message_passing import bipartite_sym_coeff
+from repro.core.tiered_memory import AccessProfile, plan_placement
+from repro.data import kronecker, synth
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(n=st.integers(2, 30), e=st.integers(1, 100), d=st.integers(1, 16),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_spmm_sum_equals_dense_matmul(n, e, d, seed):
+    """SpMM(sum) == A_dense @ X for the equivalent dense adjacency."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    mask = jnp.ones(e, bool)
+    out = sparse_ops.gspmm_copy_sum(jnp.asarray(x), jnp.asarray(src),
+                                    jnp.asarray(dst), n, mask)
+    a = np.zeros((n, n), np.float32)
+    np.add.at(a, (dst, src), 1.0)
+    np.testing.assert_allclose(out, a @ x, rtol=2e-4, atol=2e-4)
+
+
+@given(n=st.integers(2, 20), e=st.integers(1, 60), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_edge_softmax_normalizes(n, e, seed):
+    rng = np.random.default_rng(seed)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    scores = rng.standard_normal(e).astype(np.float32)
+    mask = jnp.ones(e, bool)
+    w = sparse_ops.edge_softmax(jnp.asarray(scores), jnp.asarray(dst), n, mask)
+    sums = jax.ops.segment_sum(w, jnp.asarray(dst), num_segments=n)
+    touched = np.zeros(n, bool)
+    touched[dst] = True
+    np.testing.assert_allclose(np.asarray(sums)[touched], 1.0, rtol=1e-5)
+
+
+@given(nu=st.integers(2, 12), ni=st.integers(2, 12), e=st.integers(1, 40),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_sym_coeff_bounded(nu, ni, e, seed):
+    """1/sqrt(du*di) in (0, 1] on live edges, 0 on padding."""
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, nu, e).astype(np.int32)
+    i = rng.integers(0, ni, e).astype(np.int32)
+    g = bipartite_from_numpy(u, i, nu, ni, e_pad=e + 8)
+    c = np.asarray(bipartite_sym_coeff(g))
+    assert (c[:e] > 0).all() and (c[:e] <= 1.0 + 1e-6).all()
+    assert (c[e:] == 0).all()
+
+
+@given(factor=st.integers(2, 30), seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_kronecker_edge_multiplication(factor, seed):
+    base = synth.generate_bipartite(40, 30, 150, seed=seed % 100)
+    out = kronecker.expand_by_factor(base, factor, seed=seed % 7)
+    assert out.n_edges == base.n_edges * factor
+    # no duplicate edges
+    key = out.user.astype(np.int64) * out.n_items + out.item
+    assert len(np.unique(key)) == len(key)
+
+
+@given(base_batch=st.integers(1, 1000), target=st.integers(1000, 10**6),
+       lr=st.floats(1e-6, 1e-2))
+@settings(**SETTINGS)
+def test_linear_scaling_invariant(base_batch, target, lr):
+    """lr/batch ratio is invariant under linear scaling (paper §7.1)."""
+    s = LargeBatchSchedule(base_lr=lr, base_batch=base_batch,
+                           target_batch=target)
+    assert s.linear_scaled_lr(target) / target == \
+        __import__("pytest").approx(lr / base_batch)
+    assert s.batch_for_epoch(0) <= s.batch_for_epoch(10)
+
+
+@given(sizes=st.lists(st.integers(1, 10**9), min_size=1, max_size=12),
+       budget_frac=st.floats(0.1, 1.0), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_planner_respects_budget_and_places_all(sizes, budget_frac, seed):
+    rng = np.random.default_rng(seed)
+    profiles = [AccessProfile(f"t{i}", s,
+                              reads_per_step=float(rng.uniform(0, 4)),
+                              writes_per_step=float(rng.uniform(0, 4)))
+                for i, s in enumerate(sizes)]
+    budget = max(int(sum(sizes) * budget_frac), 1)
+    plan = plan_placement(profiles, hbm_budget=budget,
+                          host_budget=int(sum(sizes)) + 1)
+    assert plan.hbm_used <= budget
+    assert set(plan.placements) == {p.name for p in profiles}
+
+
+@given(b=st.integers(1, 4), sq=st.integers(1, 48), h=st.integers(1, 4),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=15, deadline=None)
+def test_flash_attention_rows_are_convex_combos(b, sq, h, seed):
+    """Attention output rows lie in the convex hull of V rows ->
+    max |out| <= max |V| elementwise bound."""
+    from repro.models.attention import flash_attention
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (b, sq, h, 8))
+    k = jax.random.normal(k2, (b, sq, h, 8))
+    v = jax.random.normal(k3, (b, sq, h, 8))
+    out = flash_attention(q, k, v, causal=True, q_chunk=16, k_chunk=16)
+    assert float(jnp.abs(out).max()) <= float(jnp.abs(v).max()) + 1e-4
