@@ -1,0 +1,24 @@
+PY ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: test test-fast bench-smoke bench train-smoke
+
+# tier-1 suite (the CI gate)
+test:
+	$(PY) -m pytest -x -q
+
+# skip the slow multi-device subprocess tests
+test-fast:
+	$(PY) -m pytest -q --ignore=tests/test_distributed.py
+
+# fast benchmark subset: planner model + placement + memory model
+bench-smoke:
+	PYTHONPATH=src:. $(PY) -m benchmarks.run --only fig7,fig10,table5
+
+bench:
+	PYTHONPATH=src:. $(PY) -m benchmarks.run
+
+# 20 pipeline steps with real gradient accumulation (target 2048, micro 512)
+train-smoke:
+	$(PY) -m repro.launch.train --arch lightgcn --steps 20 \
+	    --ckpt-dir /tmp/repro_ckpt_smoke

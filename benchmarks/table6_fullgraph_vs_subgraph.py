@@ -4,44 +4,43 @@ subgraph training.
 Paper: full-graph time grows ~linearly with depth; DistDGL grows
 exponentially (1L: 0.07-1.4x of full-graph; 2L w/o sampling: 43-356x
 slower; 3L even WITH sampling: 32-85x slower).  We run both paths on the
-same CPU-scaled graph (LightGCN) and measure time per 150-edge batch
-equivalent, plus the Fig 14 breakdown (subgraph build share).
+same CPU-scaled graph (LightGCN) and measure time per batch, plus the
+Fig 14 breakdown (subgraph build share).
+
+The full-graph arm is the **unified pipeline's** accumulated-microbatch
+step (kernel-routed CSR aggregation + planner-derived placement), so
+this sweep measures the engine the launcher actually runs.
 """
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_graph, emit
-from repro.core import bpr, lightgcn
+from benchmarks.common import emit
+from repro.data import synth
 from repro.dist.subgraph import SubgraphTrainer
+from repro.pipeline import PipelineConfig, build_pipeline
 
 
 def run():
-    data, g = bench_graph(edges=12000)
-    params = lightgcn.init_params(jax.random.PRNGKey(0), data.n_users,
-                                  data.n_items, 32)
-    x_all = jnp.concatenate([params["user_embed"], params["item_embed"]])
+    data = synth.scaled("movielens-10m", 12000, seed=0)
     rng = np.random.default_rng(0)
 
     results = {}
     for layers in (1, 2, 3):
-        # full-graph step (batch only affects the BPR loss slice)
-        @jax.jit
-        def full_step(params):
-            u, i, n = [jnp.asarray(a) for a in bpr.sample_bpr_batch(
-                rng, data.user, data.item, data.n_items, 512)]
-
-            def loss_fn(p):
-                ue, ie = lightgcn.forward(p, g, n_layers=layers)
-                return bpr.bpr_loss(ue, ie, u, i, n)
-            return jax.grad(loss_fn)(params)
-
-        jax.block_until_ready(full_step(params))
+        # full-graph pipeline step (512-sample batch, 256 microbatch ->
+        # real 2x gradient accumulation per measured step)
+        pipe = build_pipeline(
+            PipelineConfig(arch="lightgcn", n_layers=layers,
+                           base_batch=512, target_batch=512, microbatch=256,
+                           warmup_epochs=0), data)
+        state = pipe.init_state()
+        state, _ = pipe.step_fn(state, 0)          # warmup/compile
         t0 = time.perf_counter()
-        jax.block_until_ready(full_step(params))
+        state, _ = pipe.step_fn(state, 1)
         t_full = time.perf_counter() - t0
+        x_all = jnp.concatenate([state["params"]["user_embed"],
+                                 state["params"]["item_embed"]])
 
         # subgraph step (DistDGL-like, 2 simulated workers)
         src = np.concatenate([data.user, data.item + data.n_users])
@@ -53,7 +52,7 @@ def run():
         def loss_fn(emb, seed_ids):
             return jnp.mean(emb ** 2)
 
-        _, stats = tr.step(seeds, x_all, loss_fn)   # warmup/compile
+        tr.step(seeds, x_all, loss_fn, record=False)   # warmup/compile
         _, stats = tr.step(seeds, x_all, loss_fn)
         t_sub = stats.sample_s + stats.forward_s + stats.backward_s
         results[layers] = (t_full, t_sub, stats)
@@ -75,6 +74,10 @@ def run():
     share = s.sample_s / (s.sample_s + s.forward_s + s.backward_s)
     emit("fig14/subgraph_build_share_3L", 0.0, f"{share*100:.0f}% "
          "(paper: 16-32%)")
-    # redundancy across batches (paper Fig 2)
+    # redundancy across batches (paper Fig 2): a second REAL seed batch
+    # on the 3L trainer, overlapping the first by sampling the same
+    # user range — not the warm-up replay of the same seeds
+    seeds2 = rng.integers(0, data.n_users, 512).astype(np.int32)
+    tr.step(seeds2, x_all, lambda e, s: jnp.mean(e ** 2))
     emit("fig14/subgraph_redundancy", 0.0, f"{tr.redundancy():.2f}x")
     return results

@@ -46,7 +46,8 @@ def main():
         tr = SubgraphTrainer(src, dst, data.n_users + data.n_items,
                              n_layers=layers, fanout=10, n_workers=2)
         seeds = rng.integers(0, data.n_users, 256).astype(np.int32)
-        tr.step(seeds, x_all, lambda e, s: jnp.mean(e ** 2))  # compile
+        tr.step(seeds, x_all, lambda e, s: jnp.mean(e ** 2),
+                record=False)                                 # compile
         _, st = tr.step(seeds, x_all, lambda e, s: jnp.mean(e ** 2))
         t_sub = st.sample_s + st.forward_s + st.backward_s
         build = st.sample_s / t_sub * 100

@@ -19,6 +19,7 @@ class LargeBatchSchedule:
     target_batch: int
     warmup_epochs: int = 2
     warmup_divisor: int = 10      # paper: warm-up batch = target/10
+    scaling: str = "linear"       # 'linear' (paper) | 'sqrt' (ablation)
 
     def batch_for_epoch(self, epoch: int) -> int:
         if epoch < self.warmup_epochs:
@@ -26,7 +27,13 @@ class LargeBatchSchedule:
         return self.target_batch
 
     def lr_for_epoch(self, epoch: int) -> float:
-        return self.linear_scaled_lr(self.batch_for_epoch(epoch))
+        return self.scaled_lr(self.batch_for_epoch(epoch))
+
+    def scaled_lr(self, batch: int) -> float:
+        """LR for the batch actually run, under the configured rule."""
+        if self.scaling == "sqrt":
+            return self.sqrt_scaled_lr(batch)
+        return self.linear_scaled_lr(batch)
 
     def linear_scaled_lr(self, batch: int) -> float:
         return self.base_lr * (batch / self.base_batch)

@@ -38,7 +38,10 @@ class EdgeLoader:
         return perm[self.shard_id::self.num_shards]
 
     def steps_per_epoch(self) -> int:
-        n = len(self._epoch_perm(0))
+        # arithmetic count of this shard's strided slice — callers (the
+        # pipeline engine) hit this several times per step, so don't
+        # materialize an O(N) permutation just to measure it
+        n = len(range(self.shard_id, len(self.user), self.num_shards))
         return n // self.batch if self.drop_last else -(-n // self.batch)
 
     def __iter__(self):

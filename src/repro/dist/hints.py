@@ -1,0 +1,82 @@
+"""Ambient sharding hints.
+
+Model code (transformer/moe/gcn cells) needs to pin a handful of
+intermediates whose sharding GSPMD cannot infer (reshapes that merge a
+dp axis with a tp axis, one-hot dispatch tables, ...).  Threading the
+mesh + axis names through every forward call would contaminate every
+signature, so the launch layer instead installs *hints* around the step:
+
+    with sharding_hints(dp=("pod", "data"), tp="model"):
+        loss = train_step(...)
+
+and model code calls ``constrain(x, "dp", None, "tp")`` at the few
+places that need a pin.  Outside a hints context (single-device tests,
+CPU smoke runs) every call is a no-op, so the same model code runs
+unmodified everywhere.
+
+Labels: ``None`` (unconstrained dim), ``"dp"``, ``"tp"``, or ``"dp+tp"``
+(the flattened data x model axis — used for token-major reshapes).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def get_hints() -> dict | None:
+    """The active hint dict ({'dp': ..., 'tp': ...}) or None."""
+    return getattr(_STATE, "hints", None)
+
+
+@contextlib.contextmanager
+def sharding_hints(dp=None, tp=None, mesh=None):
+    """Install dp/tp axis-name hints for the enclosed region.  ``dp`` may
+    be one axis name or a tuple (multi-pod data axes); ``mesh`` is
+    optional — when omitted, ``constrain`` emits bare PartitionSpecs and
+    relies on the surrounding jit/shard context to bind them."""
+    prev = get_hints()
+    _STATE.hints = {"dp": dp, "tp": tp, "mesh": mesh}
+    try:
+        yield
+    finally:
+        _STATE.hints = prev
+
+
+def _axes(label: str | None, h: dict):
+    if label is None:
+        return None
+    out: list[str] = []
+    for part in label.split("+"):
+        ax = h.get(part)
+        if ax is None:
+            continue
+        if isinstance(ax, (tuple, list)):
+            out.extend(ax)
+        else:
+            out.append(ax)
+    if not out:
+        return None
+    return tuple(out) if len(out) > 1 else out[0]
+
+
+def constrain(x: jax.Array, *labels):
+    """``with_sharding_constraint`` resolved through the active hints;
+    identity when no hints are installed (or the constraint cannot be
+    bound, e.g. no mesh context on a single-device backend)."""
+    h = get_hints()
+    if h is None:
+        return x
+    spec = P(*[_axes(l, h) for l in labels])
+    try:
+        if h.get("mesh") is not None:
+            from jax.sharding import NamedSharding
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(h["mesh"], spec))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x

@@ -1,0 +1,135 @@
+"""Ring SpMM — node-sharded sparse aggregation over a device ring.
+
+The feature matrix is row-sharded across the device ring; edges are
+bucketed by (destination device, ring distance to the source device).
+Each ring step k, every device holds the feature block of device
+(i+k) mod P (rotated by collective-permute) and applies exactly the
+edge bucket whose sources live on that device.  Compute on bucket k
+overlaps the permute that fetches block k+1 — the same schedule the
+paper's NUMA-blocked edge placement (Fig 11) exploits, and the
+distributed analogue of keeping SpMM's accumulator tier-resident (§6):
+the [n_local, D] output block never leaves the device.
+
+``n_steps < P`` gives a banded ring: only the n_steps nearest source
+owners are visited, which is the locality-aware partitioning knob used
+by the launch cells (REPRO_RING_STEPS); edges outside the band are
+dropped by ``bucket_edges`` (acceptable when the node ordering is
+community-clustered, paper Fig 11).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def bucket_edges(src: np.ndarray, dst: np.ndarray, n_nodes: int, p: int,
+                 coeff: np.ndarray | None = None, n_steps: int | None = None,
+                 pad_multiple: int = 8):
+    """Bucket edges by (dst device, relative ring step).
+
+    Nodes are block-partitioned: device d owns rows [d*n_local,
+    (d+1)*n_local).  Bucket [d, k] holds the edges whose dst lives on d
+    and whose src lives on (d+k) mod p, with *local* row indices, padded
+    to a uniform size.
+
+    Returns (src_l, dst_l, mask, n_local) — each array [p, n_steps, E_b]
+    — or (src_l, dst_l, mask, coeff_l, n_local) when ``coeff`` is given.
+    """
+    if n_nodes % p:
+        raise ValueError(f"n_nodes {n_nodes} not divisible by {p} devices")
+    n_local = n_nodes // p
+    steps = p if n_steps is None else n_steps
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    sdev = src // n_local
+    ddev = dst // n_local
+    rel = (sdev - ddev) % p
+    keep = rel < steps
+    buckets: dict[tuple[int, int], np.ndarray] = {}
+    emax = 1
+    for d in range(p):
+        for k in range(steps):
+            sel = np.nonzero((ddev == d) & (rel == k) & keep)[0]
+            buckets[(d, k)] = sel
+            emax = max(emax, len(sel))
+    emax = int(np.ceil(emax / pad_multiple)) * pad_multiple
+    shape = (p, steps, emax)
+    src_l = np.zeros(shape, np.int32)
+    dst_l = np.zeros(shape, np.int32)
+    mask = np.zeros(shape, bool)
+    coeff_l = np.zeros(shape, np.float32) if coeff is not None else None
+    for (d, k), sel in buckets.items():
+        e = len(sel)
+        src_l[d, k, :e] = src[sel] % n_local
+        dst_l[d, k, :e] = dst[sel] % n_local
+        mask[d, k, :e] = True
+        if coeff_l is not None:
+            coeff_l[d, k, :e] = np.asarray(coeff)[sel]
+    if coeff_l is not None:
+        return src_l, dst_l, mask, coeff_l, n_local
+    return src_l, dst_l, mask, n_local
+
+
+def make_ring_spmm(mesh, axis, n_local: int, with_coeff: bool = False,
+                   n_steps: int | None = None, relative_buckets: bool = True):
+    """Build ring_spmm(x, src_l, dst_l, mask[, coeff]) -> A @ x over the
+    flattened device ring of ``axis`` (one name or a tuple of names).
+
+    x: [N, D] row-sharded on ``axis``; bucket arrays [P, S, E_b] sharded
+    on their leading (dst-device) dim, as produced by ``bucket_edges``
+    (which emits relative buckets — ``relative_buckets`` is accepted for
+    signature stability and must stay True).
+    """
+    if not relative_buckets:
+        raise NotImplementedError("absolute bucket indexing was retired; "
+                                  "bucket_edges emits relative buckets")
+    axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+    axes = tuple(axes)
+    p = int(np.prod([mesh.shape[a] for a in axes]))
+    steps = p if n_steps is None else n_steps
+
+    def local_fn(x, src_l, dst_l, mask, coeff=None):
+        # shard_map blocks: x [n_local, D]; buckets [1, S, E_b]
+        src_l = src_l[0]
+        dst_l = dst_l[0]
+        mask = mask[0]
+        if coeff is not None:
+            coeff = coeff[0]
+        perm = [(j, (j - 1) % p) for j in range(p)]
+
+        def body(k, carry):
+            acc, x_rot = carry
+            bs = jax.lax.dynamic_index_in_dim(src_l, k, 0, keepdims=False)
+            bd = jax.lax.dynamic_index_in_dim(dst_l, k, 0, keepdims=False)
+            bm = jax.lax.dynamic_index_in_dim(mask, k, 0, keepdims=False)
+            m = jnp.where(bm[:, None], x_rot[bs], 0.0)
+            if coeff is not None:
+                bc = jax.lax.dynamic_index_in_dim(coeff, k, 0, keepdims=False)
+                m = m * bc[:, None]
+            acc = acc + jax.ops.segment_sum(m, bd, num_segments=n_local)
+            # rotate: after this permute device i holds block (i+k+1)%p
+            x_rot = jax.lax.ppermute(x_rot, axes if len(axes) > 1 else axes[0],
+                                     perm)
+            return acc, x_rot
+
+        acc = jnp.zeros((n_local, x.shape[-1]), x.dtype)
+        acc, _ = jax.lax.fori_loop(0, steps, body, (acc, x))
+        return acc
+
+    xspec = P(axes if len(axes) > 1 else axes[0], None)
+    bspec = P(axes if len(axes) > 1 else axes[0], None, None)
+    in_specs = (xspec, bspec, bspec, bspec) + ((bspec,) if with_coeff else ())
+    fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs, out_specs=xspec)
+
+    if with_coeff:
+        def ring(x, src_l, dst_l, mask, coeff):
+            return fn(x, src_l, dst_l, mask, coeff)
+    else:
+        def ring(x, src_l, dst_l, mask):
+            return fn(x, src_l, dst_l, mask)
+    return ring

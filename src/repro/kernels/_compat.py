@@ -1,0 +1,20 @@
+"""Pallas API compatibility across jax versions.
+
+jax renamed the TPU-Pallas surface between 0.4.x and newer releases:
+``pltpu.TPUMemorySpace`` -> ``pltpu.MemorySpace`` (and grew an ``HBM``
+member; older versions spell HBM-resident refs as ``ANY``), and
+``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``.  The kernels
+import the canonical names from here so they run on either API.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_MEMSPACE = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+
+# HBM-resident ref (manually DMA'd inside the kernel): newer jax has an
+# explicit HBM member; on older jax ``ANY`` leaves the buffer unpinned
+# (in practice HBM) which is the same contract.
+MEM_HBM = getattr(_MEMSPACE, "HBM", _MEMSPACE.ANY)
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

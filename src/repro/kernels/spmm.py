@@ -26,6 +26,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import MEM_HBM, CompilerParams
+
 DEFAULT_ROW_BLOCK = 8
 
 
@@ -52,7 +54,8 @@ def _kernel(indptr, rows_src, x_hbm, out_ref, row_buf, sem,
                 out_ref[r, :] = jnp.maximum(out_ref[r, :], v)
             return 0
 
-        jax.lax.fori_loop(lo, hi, edge_body, 0, unroll=False)
+        # dynamic bounds (indptr in SMEM): older jax forbids `unroll` here
+        jax.lax.fori_loop(lo, hi, edge_body, 0)
         return 0
 
     jax.lax.fori_loop(0, rb, row_body, 0, unroll=False)
@@ -85,7 +88,7 @@ def spmm_csr_pallas(reduce: str, values: jax.Array, indptr: jax.Array,
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(n_pad // rb,),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.HBM)],
+        in_specs=[pl.BlockSpec(memory_space=MEM_HBM)],
         out_specs=pl.BlockSpec((rb, d), lambda i, *_: (i, 0)),
         scratch_shapes=[pltpu.VMEM((1, d), jnp.float32),
                         pltpu.SemaphoreType.DMA],
@@ -94,7 +97,7 @@ def spmm_csr_pallas(reduce: str, values: jax.Array, indptr: jax.Array,
         functools.partial(_kernel, reduce=reduce, rb=rb, gather=gather),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_pad, d), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
         name=f"spmm_{reduce}",

@@ -4,8 +4,14 @@ CPU-sized by default (smoke config, synthetic data); the same entry point
 drives the production mesh on real hardware via --mesh.
 
   python -m repro.launch.train --arch lightgcn --steps 100
+  python -m repro.launch.train --arch ngcf --target-batch 4096 --microbatch 512
   python -m repro.launch.train --arch gcn-cora --steps 50
   python -m repro.launch.train --arch deepfm --steps 50
+
+GNNRecSys archs (lightgcn / ngcf / gcn) run through the unified
+pipeline: tiered-memory placement over the run's tensor set, the §7.1
+large-batch schedule, and microbatched gradient accumulation so the
+target batch can exceed the per-step memory budget.
 """
 from __future__ import annotations
 
@@ -18,67 +24,47 @@ import numpy as np
 
 from repro import configs as config_registry
 from repro.checkpoint import latest_step
-from repro.core import bpr, lightgcn, ngcf
-from repro.core.graph import bipartite_from_numpy
-from repro.core.large_batch import LargeBatchSchedule
 from repro.data import synth
-from repro.data.loader import EdgeLoader
 from repro.optim import adam
-from repro.runtime.loop import LoopConfig, run_training
+from repro.pipeline import PipelineConfig, build_pipeline
+from repro.runtime.loop import LoopConfig, run_pipeline, run_training
+
+PIPELINE_ARCHS = ("lightgcn", "ngcf", "gcn")
 
 
-def train_gnnrecsys(arch: str, steps: int, ckpt_dir: str, batch: int = 512,
-                    edges: int = 4000, embed_dim: int = 32, layers: int = 2,
-                    log_every: int = 20):
-    """Full-graph BPR training of NGCF/LightGCN on a synthetic graph that
-    matches the paper's dataset statistics."""
+def train_gnnrecsys(arch: str, steps: int, ckpt_dir: str,
+                    target_batch: int = 2048, microbatch: int | None = 512,
+                    base_batch: int = 512, edges: int = 4000,
+                    embed_dim: int = 32, layers: int = 2,
+                    hbm_budget: int | None = None):
+    """Full-graph BPR training through the unified pipeline on a synthetic
+    graph matching the paper's dataset statistics."""
     data = synth.scaled("movielens-10m", edges, seed=0)
-    train, test = synth.train_test_split(data)
-    g = bipartite_from_numpy(train.user, train.item, data.n_users,
-                             data.n_items)
-    sched = LargeBatchSchedule(base_lr=1e-3, base_batch=batch,
-                               target_batch=batch)
-    opt = adam(sched.linear_scaled_lr(batch))
-    is_ngcf = arch == "ngcf"
-    key = jax.random.PRNGKey(0)
-    if is_ngcf:
-        params = ngcf.init_params(key, data.n_users, data.n_items, embed_dim,
-                                  layers)
-    else:
-        params = lightgcn.init_params(key, data.n_users, data.n_items,
-                                      embed_dim)
-    loader = EdgeLoader(train.user, train.item, batch)
-    rng = np.random.default_rng(0)
-
-    @jax.jit
-    def train_step(state, users, pos, neg):
-        def loss_fn(p):
-            if is_ngcf:
-                ue, ie = ngcf.forward(p, g)
-            else:
-                ue, ie = lightgcn.forward(p, g, n_layers=layers)
-            return bpr.bpr_loss(ue, ie, users, pos, neg)
-
-        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
-        p, o = opt.update(grads, state["opt"], state["params"])
-        return {"params": p, "opt": o}, loss
-
-    def step_fn(state, step):
-        u, i = next(loader)
-        neg = rng.integers(0, data.n_items, len(u)).astype(np.int32)
-        return train_step(state, jnp.asarray(u), jnp.asarray(i),
-                          jnp.asarray(neg))
-
-    state0 = {"params": params, "opt": opt.init(params)}
-    cfg = LoopConfig(ckpt_dir=ckpt_dir, ckpt_every=max(steps // 2, 1),
-                     max_steps=steps, async_ckpt=False)
+    train, _test = synth.train_test_split(data)
+    cfg = PipelineConfig(arch=arch, embed_dim=embed_dim, n_layers=layers,
+                         base_batch=base_batch, target_batch=target_batch,
+                         microbatch=microbatch, hbm_budget=hbm_budget)
+    pipe = build_pipeline(cfg, train)
+    print(pipe.plan.describe())
+    loop_cfg = LoopConfig(ckpt_dir=ckpt_dir, ckpt_every=max(steps // 2, 1),
+                          max_steps=steps, async_ckpt=False)
     t0 = time.perf_counter()
-    report = run_training(cfg, state0, step_fn)
+    report = run_pipeline(loop_cfg, pipe)
     dt = time.perf_counter() - t0
     print(f"[{arch}] {report.steps_run} steps in {dt:.1f}s "
-          f"loss {report.losses[0]:.4f} -> {report.losses[-1]:.4f} "
-          f"(resumed_from={report.resumed_from})")
+          f"loss {_loss_span(report)} "
+          f"(microbatch={pipe.plan.microbatch}, "
+          f"accum={pipe.plan.microbatches_for_epoch(pipe.loader.state.epoch)}x, "
+          f"resumed_from={report.resumed_from})")
     return report
+
+
+def _loss_span(report) -> str:
+    """'first -> last' loss, robust to a resume at max_steps (no new
+    steps run -> losses is empty)."""
+    if not report.losses:
+        return "n/a (already at max_steps)"
+    return f"{report.losses[0]:.4f} -> {report.losses[-1]:.4f}"
 
 
 def train_gcn(steps: int, ckpt_dir: str):
@@ -108,7 +94,7 @@ def train_gcn(steps: int, ckpt_dir: str):
         LoopConfig(ckpt_dir=ckpt_dir, ckpt_every=max(steps // 2, 1),
                    max_steps=steps, async_ckpt=False),
         state0, lambda s, _: train_step(s))
-    print(f"[gcn] loss {report.losses[0]:.4f} -> {report.losses[-1]:.4f}")
+    print(f"[gcn] loss {_loss_span(report)}")
     return report
 
 
@@ -150,7 +136,7 @@ def train_recsys(arch: str, steps: int, ckpt_dir: str, batch: int = 256):
     report = run_training(
         LoopConfig(ckpt_dir=ckpt_dir, ckpt_every=max(steps // 2, 1),
                    max_steps=steps, async_ckpt=False), state0, step_fn)
-    print(f"[{arch}] loss {report.losses[0]:.4f} -> {report.losses[-1]:.4f}")
+    print(f"[{arch}] loss {_loss_span(report)}")
     return report
 
 
@@ -159,17 +145,31 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--target-batch", type=int, default=2048,
+                    help="large-batch target (accumulated microbatches)")
+    ap.add_argument("--microbatch", type=int, default=512,
+                    help="microbatch size; 0 = derive from HBM headroom")
+    ap.add_argument("--edges", type=int, default=4000)
+    ap.add_argument("--embed-dim", type=int, default=32)
+    ap.add_argument("--layers", type=int, default=2)
     args = ap.parse_args()
+    if args.arch in PIPELINE_ARCHS:
+        train_gnnrecsys(args.arch, args.steps, f"{args.ckpt_dir}/{args.arch}",
+                        target_batch=args.target_batch,
+                        microbatch=args.microbatch or None,
+                        edges=args.edges, embed_dim=args.embed_dim,
+                        layers=args.layers)
+        return
     arch = config_registry.canon(args.arch)
-    if arch in ("ngcf", "lightgcn"):
-        train_gnnrecsys(arch, args.steps, f"{args.ckpt_dir}/{arch}")
-    elif arch == "gcn_cora":
+    if arch == "gcn_cora":
         train_gcn(args.steps, f"{args.ckpt_dir}/{arch}")
     elif arch in ("deepfm", "xdeepfm", "dlrm_rm2"):
         train_recsys(arch, args.steps, f"{args.ckpt_dir}/{arch}")
     else:
-        raise SystemExit(f"CPU trainer for {arch} not wired; use the "
-                         f"dry-run for LM archs")
+        raise SystemExit(
+            f"CPU trainer for {arch!r} not wired; pipeline archs: "
+            f"{', '.join(PIPELINE_ARCHS)}; also gcn-cora, deepfm, xdeepfm, "
+            f"dlrm_rm2 (LM archs run via the dry-run)")
 
 
 if __name__ == "__main__":

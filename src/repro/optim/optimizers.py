@@ -15,7 +15,10 @@ import jax.numpy as jnp
 
 class Optimizer(NamedTuple):
     init: Callable[[Any], Any]
-    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
+    # (grads, state, params[, lr=...]) — sgd/adam accept an optional
+    # per-call lr override (the large-batch schedule's epoch LR, passed
+    # as a traced scalar so changing it does not retrace the step)
+    update: Callable[..., tuple[Any, Any]]
 
 
 def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
@@ -24,7 +27,7 @@ def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
             return ()
         return jax.tree.map(jnp.zeros_like, params)
 
-    def update(grads, state, params):
+    def update(grads, state, params, lr=lr):
         if momentum == 0.0:
             new_p = jax.tree.map(lambda p, g: p - lr * g, params, grads)
             return new_p, state
@@ -44,9 +47,14 @@ def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
             "t": jnp.zeros((), jnp.int32),
         }
 
-    def update(grads, state, params):
+    base_lr = lr
+
+    def update(grads, state, params, lr=None):
         t = state["t"] + 1
-        step_lr = lr_fn(t) if lr_fn is not None else lr
+        if lr is not None:
+            step_lr = lr
+        else:
+            step_lr = lr_fn(t) if lr_fn is not None else base_lr
         m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
         v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
         bc1 = 1 - b1 ** t.astype(jnp.float32)

@@ -1,0 +1,258 @@
+"""Unified training engine (paper §7 end-to-end).
+
+Composes the previously-disconnected subsystems into one pipeline:
+
+  TieredMemoryPlanner  — placement over the run's actual tensor set,
+                         re-run on the loop's re-layout requests;
+  LargeBatchSchedule   — per-epoch batch + LR (warm-up batch = target/10
+                         for the first epochs, linear LR scaling);
+  microbatch gradient accumulation — the target batch B runs as
+                         ceil(B/microbatch) accumulated microbatches so
+                         the paper's 150K-sample batches fit a fixed
+                         HBM budget;
+  kernel-routed models — registry forwards aggregate through the
+                         Pallas/XLA SpMM dispatch (pipeline.sparse);
+  EdgeLoader           — deterministic resumable microbatch stream;
+  runtime.loop         — the fault-tolerant outer loop consumes
+                         ``step_fn``/``on_relayout`` produced here
+                         (see runtime.loop.run_pipeline).
+
+The loader iterates at *microbatch* granularity; one engine step drains
+``microbatches_for_epoch(epoch)`` consecutive microbatches, so the
+warm-up epochs automatically accumulate fewer microbatches per update.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bpr
+from repro.core.large_batch import LargeBatchSchedule
+from repro.data.loader import EdgeLoader
+from repro.data.synth import InteractionData
+from repro.optim import adam, sgd
+from repro.pipeline.plan import (TrainPlan, apply_placements,
+                                 build_train_plan)
+from repro.pipeline.registry import get_model
+from repro.pipeline.sparse import BipartiteCSR, default_impl
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    arch: str = "lightgcn"
+    embed_dim: int = 32
+    n_layers: int = 2
+    optimizer: str = "adam"            # 'adam' | 'sgd'
+    base_lr: float = 1e-3
+    base_batch: int = 256
+    target_batch: int = 2048
+    microbatch: int | None = None      # None -> derived from HBM headroom
+    warmup_epochs: int = 2
+    lr_scaling: str = "linear"         # 'linear' | 'sqrt' (paper ablation)
+    l2: float = 1e-4
+    hbm_budget: int | None = None      # planner budget override (bytes)
+    impl: str | None = None            # kernel dispatch override
+    seed: int = 0
+
+
+class Pipeline:
+    """One training run: state, plan, and the step the loop executes."""
+
+    def __init__(self, cfg: PipelineConfig, train: InteractionData):
+        self.cfg = cfg
+        self.spec = get_model(cfg.arch)
+        impl = cfg.impl or default_impl()
+        self.g = BipartiteCSR(train.user, train.item, train.n_users,
+                              train.n_items, impl=impl)
+        self.n_items = train.n_items
+
+        params = self.spec.init(jax.random.PRNGKey(cfg.seed), train.n_users,
+                                train.n_items, cfg.embed_dim, cfg.n_layers)
+        self.opt = {"adam": adam, "sgd": sgd}[cfg.optimizer](cfg.base_lr)
+        opt_state = self.opt.init(params)
+
+        sched = LargeBatchSchedule(base_lr=cfg.base_lr,
+                                   base_batch=cfg.base_batch,
+                                   target_batch=cfg.target_batch,
+                                   warmup_epochs=cfg.warmup_epochs,
+                                   scaling=cfg.lr_scaling)
+        self.plan = build_train_plan(cfg.arch, self.spec, params, opt_state,
+                                     self.g, cfg.n_layers, cfg.embed_dim,
+                                     sched, impl, hbm_budget=cfg.hbm_budget,
+                                     microbatch=cfg.microbatch)
+        self._state0 = self.apply_plan({"params": params, "opt": opt_state})
+
+        self.loader = EdgeLoader(train.user, train.item,
+                                 batch=self.plan.microbatch, seed=cfg.seed)
+        self._next_step = 0
+
+        n_layers = cfg.n_layers
+        l2 = cfg.l2
+        spec = self.spec
+        g = self.g
+
+        @jax.jit
+        def micro_value_and_grad(params, users, pos, neg):
+            def loss_fn(p):
+                ue, ie = spec.forward(p, g, n_layers)
+                return bpr.bpr_loss(ue, ie, users, pos, neg, l2=l2)
+            return jax.value_and_grad(loss_fn)(params)
+
+        @jax.jit
+        def apply_update(state, grads, lr):
+            p, o = self.opt.update(grads, state["opt"], state["params"],
+                                   lr=lr)
+            return {"params": p, "opt": o}
+
+        self._micro_value_and_grad = micro_value_and_grad
+        self._apply_update = apply_update
+
+    # ---------------------------------------------------------------- state
+    def init_state(self):
+        return self._state0
+
+    def apply_plan(self, state):
+        """Place every state leaf onto its planned memory tier (used on
+        fresh state, after re-layout, and on checkpoint restore — raw
+        restored leaves otherwise land back in HBM)."""
+        state, self.n_offloaded = apply_placements(state, self.plan.plan)
+        return state
+
+    @property
+    def sched(self) -> LargeBatchSchedule:
+        return self.plan.sched
+
+    def out_dim(self) -> int:
+        """Final embedding width, per the model's own contract."""
+        return self.spec.out_dim(self.cfg.embed_dim, self.cfg.n_layers)
+
+    def lr_for_epoch(self, epoch: int) -> float:
+        """LR scaled to the batch *actually run* this epoch — the
+        schedule batch rounded up to a whole number of microbatches —
+        so the Goyal scaling rule tracks the realized batch size."""
+        actual = self.plan.microbatches_for_epoch(epoch) \
+            * self.plan.microbatch
+        return self.sched.scaled_lr(actual)
+
+    def steps_per_epoch(self, epoch: int) -> int:
+        spe_micro = self.loader.steps_per_epoch()
+        return max(1, spe_micro // self.plan.microbatches_for_epoch(epoch))
+
+    def steps_for_epochs(self, n_epochs: int) -> int:
+        return sum(self.steps_per_epoch(e) for e in range(n_epochs))
+
+    # ---------------------------------------------------------------- step
+    def grads_for_batch(self, params, users, pos, neg):
+        """Microbatched gradient accumulation over one target batch.
+
+        Per-chunk mean-loss gradients are combined weighted by chunk
+        size, so the result equals the full-batch gradient even when the
+        batch is not a microbatch multiple (pinned by
+        tests/test_pipeline.py).  Returns (mean_loss, grads).  A ragged
+        final chunk costs one extra jit trace; loader-fed batches are
+        always full microbatches.
+        """
+        mu = self.plan.microbatch
+        n = len(users)
+        k = max(1, math.ceil(n / mu))
+        loss_sum = None      # device scalar: no host sync inside the loop
+        acc = None
+        for c in range(k):
+            sl = slice(c * mu, min((c + 1) * mu, n))
+            w = (sl.stop - sl.start) / n
+            loss, grads = self._micro_value_and_grad(
+                params, jnp.asarray(users[sl]), jnp.asarray(pos[sl]),
+                jnp.asarray(neg[sl]))
+            wl = loss * w
+            wg = jax.tree.map(lambda t: t * w, grads)
+            loss_sum = wl if loss_sum is None else loss_sum + wl
+            acc = wg if acc is None else jax.tree.map(jnp.add, acc, wg)
+        return float(loss_sum), acc
+
+    def _next_target_batch(self, k: int, step: int):
+        """Drain k loader microbatches into one (u, i+, i-) target batch.
+        Negatives are seeded per (run seed, step) so a resumed run draws
+        the same samples as an uninterrupted one."""
+        us, ps = [], []
+        for _ in range(k):
+            u, i = next(self.loader)
+            us.append(u)
+            ps.append(i)
+        users = np.concatenate(us)
+        pos = np.concatenate(ps)
+        rng = np.random.default_rng((self.cfg.seed, step))
+        neg = rng.integers(0, self.n_items, len(users)).astype(np.int32)
+        return users, pos, neg
+
+    def _micro_pos(self) -> int:
+        """Loader position as a linear microbatch counter.  EdgeLoader
+        rolls epochs lazily (state (e, spe) before the roll), and
+        ``g = e*spe + s`` makes consumption exactly ``g += 1``."""
+        st = self.loader.state
+        return st.epoch * self.loader.steps_per_epoch() + st.step
+
+    def current_epoch(self) -> int:
+        """The epoch the NEXT microbatch will come from (post-roll), so
+        the first step of an epoch uses that epoch's batch and LR."""
+        return self._micro_pos() // self.loader.steps_per_epoch()
+
+    def seek(self, step: int) -> None:
+        """Position the loader as if ``step`` pipeline steps had already
+        run, so a checkpoint-resumed loop continues mid-schedule (same
+        epoch, same accumulation factor, same sample order).  Closed
+        form over epoch segments (each step consumes k(epoch)
+        microbatches), so a deep resume costs O(epochs), not O(steps)."""
+        from repro.data.loader import LoaderState
+        spe = self.loader.steps_per_epoch()
+        g = 0
+        done = 0
+        while done < step:
+            e = g // spe
+            k = self.plan.microbatches_for_epoch(e)
+            # steps until the next epoch boundary can change k (the step
+            # crossing the boundary still uses this epoch's k)
+            t = min(step - done, max(1, math.ceil(((e + 1) * spe - g) / k)))
+            g += t * k
+            done += t
+        if g == 0:
+            self.loader.state = LoaderState(0, 0)
+        else:
+            e = (g - 1) // spe
+            self.loader.state = LoaderState(e, g - e * spe)
+        self._next_step = step
+
+    def step_fn(self, state, step: int):
+        """(state, step) -> (state, loss): the loop-consumable step."""
+        if step != self._next_step:
+            self.seek(step)
+        epoch = self.current_epoch()
+        k = self.plan.microbatches_for_epoch(epoch)
+        users, pos, neg = self._next_target_batch(k, step)
+        loss, grads = self.grads_for_batch(state["params"], users, pos, neg)
+        lr = jnp.float32(self.lr_for_epoch(epoch))
+        self._next_step = step + 1
+        return self._apply_update(state, grads, lr), loss
+
+    def on_relayout(self, state):
+        """Loop straggler escalation: re-run the planner over the current
+        tensor set and re-place the state (paper §8.1 automation)."""
+        cfg = self.cfg
+        self.plan = build_train_plan(
+            cfg.arch, self.spec, state["params"], state["opt"], self.g,
+            cfg.n_layers, cfg.embed_dim, self.sched, self.plan.impl,
+            hbm_budget=cfg.hbm_budget, microbatch=self.plan.microbatch)
+        state, self.n_offloaded = apply_placements(state, self.plan.plan)
+        return state
+
+    # ---------------------------------------------------------------- eval
+    def embeddings(self, state):
+        """Final (user, item) embeddings for evaluation."""
+        return self.spec.forward(state["params"], self.g, self.cfg.n_layers)
+
+
+def build_pipeline(cfg: PipelineConfig, train: InteractionData) -> Pipeline:
+    return Pipeline(cfg, train)

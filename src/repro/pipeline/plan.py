@@ -1,0 +1,165 @@
+"""TrainPlan — the placement + batching contract of one training run.
+
+This is where the paper's two headline knobs stop being independent:
+the TieredMemoryPlanner decides which tensors keep HBM residency, and
+whatever HBM is left over bounds the *microbatch*; the 150K-sample
+target batches of §7.1 then run as ``ceil(B/microbatch)`` accumulated
+microbatches.  ``build_train_plan`` profiles the **actual** tensor set
+of the model (every params/optimizer leaf by its real nbytes, the CSR
+adjacency, and — only for models that materialize them — the per-layer
+edge-message matrices), runs the planner, and derives the microbatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import numpy as np
+
+from repro.core.large_batch import LargeBatchSchedule
+from repro.core.tiered_memory import (AccessProfile, HBM_CAPACITY, Plan,
+                                      plan_placement)
+from repro.pipeline.registry import ModelSpec
+from repro.pipeline.sparse import BipartiteCSR
+
+
+def _leaf_profiles(tree, prefix: str, reads: float, writes: float):
+    out = []
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = prefix + jax.tree_util.keystr(kp)
+        nbytes = int(np.prod(leaf.shape) * leaf.dtype.itemsize) \
+            if hasattr(leaf, "shape") else 0
+        if nbytes == 0:
+            continue
+        row = (leaf.shape[-1] if getattr(leaf, "ndim", 0) else 1) * \
+            leaf.dtype.itemsize
+        out.append(AccessProfile(name, nbytes, reads_per_step=reads,
+                                 writes_per_step=writes, access_size=row))
+    return out
+
+
+def profiles_from_state(params, opt_state, g: BipartiteCSR, n_layers: int,
+                        spec: ModelSpec, embed_dim: int) -> list[AccessProfile]:
+    """AccessProfiles over the run's actual tensor set (paper §2.1 memory
+    model, measured from the live pytrees instead of assumed shapes)."""
+    profs = []
+    # embedding tables + weights: read every layer fwd+bwd, written once
+    profs += _leaf_profiles(params, "params", reads=2.0 * n_layers, writes=1.0)
+    # optimizer state: one read + one write per update
+    profs += _leaf_profiles(opt_state, "opt", reads=1.0, writes=1.0)
+    # adjacency (both CSR directions): read-only, tiny access granularity
+    profs.append(AccessProfile("graph/csr", g.graph_nbytes(),
+                               reads_per_step=2.0 * n_layers,
+                               writes_per_step=0.0, access_size=8))
+    if spec.materializes_messages:
+        # per-layer messages are layer-input wide ([E, embed_dim]) even
+        # when the model concatenates layer outputs
+        row = embed_dim * 4
+        for l in range(n_layers):
+            profs.append(AccessProfile(
+                f"messages_l{l}", g.n_edges * row, reads_per_step=2.0,
+                writes_per_step=2.0, access_size=row))
+    return profs
+
+
+def derive_microbatch(free_hbm: int, out_dim: int, target_batch: int,
+                      floor: int = 32) -> int:
+    """Largest power-of-two microbatch whose per-sample working set fits
+    the HBM left after placement.  Per BPR sample: 3 embedding rows
+    (u, i+, i-) x fwd/bwd activations + temps (~8 row-equivalents)."""
+    bytes_per_sample = 3 * out_dim * 4 * 8
+    mu = max(int(free_hbm) // bytes_per_sample, floor)
+    mu = 1 << (mu.bit_length() - 1)          # pow2 floor
+    return int(min(mu, target_batch))
+
+
+@dataclasses.dataclass
+class TrainPlan:
+    """Everything the engine needs to run one training configuration."""
+    arch: str
+    plan: Plan                     # tier placement over the tensor set
+    sched: LargeBatchSchedule
+    microbatch: int
+    impl: str                      # kernel dispatch ('pallas' | 'xla')
+    hbm_budget: int
+
+    def microbatches_for_epoch(self, epoch: int) -> int:
+        return max(1, math.ceil(self.sched.batch_for_epoch(epoch)
+                                / self.microbatch))
+
+    def describe(self) -> str:
+        tiers = {}
+        for name, p in self.plan.placements.items():
+            tiers.setdefault(p.tier, []).append(name)
+        lines = [f"TrainPlan[{self.arch}] impl={self.impl} "
+                 f"microbatch={self.microbatch} "
+                 f"target_batch={self.sched.target_batch} "
+                 f"hbm={self.plan.hbm_used/2**20:.1f}/"
+                 f"{self.hbm_budget/2**20:.1f} MiB "
+                 f"est_penalty={self.plan.est_step_penalty_s*1e3:.2f} ms/step"]
+        for tier in ("hbm", "host"):
+            names = tiers.get(tier, [])
+            if names:
+                lines.append(f"  {tier}: {', '.join(sorted(names))}")
+        return "\n".join(lines)
+
+
+def build_train_plan(arch: str, spec: ModelSpec, params, opt_state,
+                     g: BipartiteCSR, n_layers: int, embed_dim: int,
+                     sched: LargeBatchSchedule, impl: str,
+                     hbm_budget: int | None = None,
+                     microbatch: int | None = None) -> TrainPlan:
+    budget = int(hbm_budget) if hbm_budget is not None else HBM_CAPACITY
+    profs = profiles_from_state(params, opt_state, g, n_layers, spec,
+                                embed_dim)
+    plan = plan_placement(profs, hbm_budget=budget)
+    if microbatch is None:
+        microbatch = derive_microbatch(budget - plan.hbm_used,
+                                       spec.out_dim(embed_dim, n_layers),
+                                       sched.target_batch)
+    return TrainPlan(arch, plan, sched, int(microbatch), impl, budget)
+
+
+# ---------------------------------------------------------------- placement
+def _host_offload_sharding():
+    """A sharding that pins to the host memory tier, when the backend has
+    one (TPU); None on backends without memory kinds (CPU tests)."""
+    try:
+        dev = jax.devices()[0]
+        kinds = {m.kind for m in dev.addressable_memories()}
+        if "pinned_host" not in kinds:
+            return None
+        return jax.sharding.SingleDeviceSharding(dev,
+                                                 memory_kind="pinned_host")
+    except Exception:  # noqa: BLE001 — backends without memories API
+        return None
+
+
+def apply_placements(state, plan: Plan) -> tuple[object, int]:
+    """device_put every state leaf onto its planned tier.  Returns
+    (state, n_offloaded).  No-op (0 offloaded) when the backend has no
+    host memory kind — the plan still documents intent and drives the
+    microbatch, which is what the CPU CI exercises."""
+    host = _host_offload_sharding()
+    if host is None:
+        return state, 0
+
+    moved = 0
+
+    def place(prefix, tree):
+        nonlocal moved
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        leaves = []
+        for kp, leaf in flat:
+            name = prefix + jax.tree_util.keystr(kp)
+            pl = plan.placements.get(name)
+            if pl is not None and pl.tier == "host":
+                leaf = jax.device_put(leaf, host)
+                moved += 1
+            leaves.append(leaf)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    out = {"params": place("params", state["params"]),
+           "opt": place("opt", state["opt"])}
+    return out, moved

@@ -1,0 +1,156 @@
+"""CSR-routed sparse aggregation for the training pipeline.
+
+The seed models aggregated through jnp segment ops directly; the
+pipeline instead pre-sorts the bipartite graph into the two CSR
+directions once (host side) and routes every aggregation through
+``repro.kernels.ops.spmm_csr`` — the Pallas TPU kernel on TPU backends,
+the XLA reference oracle elsewhere (``default_impl``).
+
+Autodiff: ``pallas_call`` has no registered VJP, so each aggregation op
+carries a custom VJP that expresses its gradient as the *reverse
+direction's* SpMM — the paper's observation (§4) that GNN gradients map
+onto the same SDDMM/SpMM kernels, made explicit:
+
+  * adjacency matmul (gather=True SpMM):  d/dx (A x) = A^T ct — the
+    opposite-direction gather-SpMM;
+  * edge aggregation (gather=False SpMM): d/dvalues = ct[dst_e] — an
+    SDDMM-copy gather.
+
+LightGCN's symmetric normalization 1/sqrt(d_u d_i) is separable, so the
+kernels run unweighted and the degree scalings apply at node level —
+no [E, D] message matrix is ever materialized for LightGCN/GCN (the
+planner's tensor set reflects this; NGCF's Hadamard messages still
+materialize one edge matrix per layer).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.kernels.spmm import build_csr_by_dst
+
+
+def default_impl() -> str:
+    """Kernel dispatch per backend: Pallas on TPU, XLA oracle elsewhere
+    (interpret-mode Pallas is correct but far too slow for training)."""
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _make_adj_matmul(indptr_f, src_f, n_dst, indptr_b, src_b, n_src, impl):
+    """out = A x via gather-SpMM; VJP = A^T ct via the reverse CSR."""
+
+    def _run(x):
+        return kops.spmm_csr("sum", x, indptr_f, src_f, n_dst,
+                             gather=True, impl=impl)
+
+    @jax.custom_vjp
+    def matmul(x):
+        return _run(x)
+
+    def fwd(x):
+        return _run(x), None
+
+    def bwd(_, ct):
+        return (kops.spmm_csr("sum", ct, indptr_b, src_b, n_src,
+                              gather=True, impl=impl),)
+
+    matmul.defvjp(fwd, bwd)
+    return matmul
+
+
+def _make_edge_agg(indptr, dst_sorted, n_dst, impl):
+    """out[v] = sum of edge values into v (values already dst-sorted);
+    VJP = ct[dst_e], the SDDMM-copy gather."""
+
+    def _run(values):
+        # src_sorted operand unused when gather=False; pass dst_sorted
+        return kops.spmm_csr("sum", values, indptr, dst_sorted, n_dst,
+                             gather=False, impl=impl)
+
+    @jax.custom_vjp
+    def agg(values):
+        return _run(values)
+
+    def fwd(values):
+        return _run(values), None
+
+    def bwd(_, ct):
+        return (ct[dst_sorted],)
+
+    agg.defvjp(fwd, bwd)
+    return agg
+
+
+class BipartiteCSR:
+    """Both CSR directions of a user-item graph + kernel-routed ops.
+
+    Built once per training run (host-side sort); the jnp index arrays
+    are captured as trace-time constants by the jitted train step.
+
+      agg_u2i(x_user)  -> [n_items, D]   unweighted A^T x
+      agg_i2u(x_item)  -> [n_users, D]   unweighted A x
+      edge_agg_item(m) -> [n_items, D]   m in ui (item-sorted) edge order
+      edge_agg_user(m) -> [n_users, D]   m in iu (user-sorted) edge order
+      perm_ui_to_iu    reorders ui-order edge values into iu order (the
+                       O3 SDDMM-reuse path: one Hadamard per layer)
+    """
+
+    def __init__(self, user: np.ndarray, item: np.ndarray, n_users: int,
+                 n_items: int, edge_mask: np.ndarray | None = None,
+                 impl: str | None = None):
+        self.impl = impl or default_impl()
+        user = np.asarray(user, np.int32)
+        item = np.asarray(item, np.int32)
+        if edge_mask is not None:
+            keep = np.asarray(edge_mask).astype(bool)
+            user, item = user[keep], item[keep]
+        self.n_users = int(n_users)
+        self.n_items = int(n_items)
+        self.n_edges = len(user)
+
+        ui_indptr, ui_src, perm_ui = build_csr_by_dst(item, user, n_items)
+        iu_indptr, iu_src, perm_iu = build_csr_by_dst(user, item, n_users)
+        inv_ui = np.empty(self.n_edges, np.int64)
+        inv_ui[perm_ui] = np.arange(self.n_edges)
+        self.perm_ui_to_iu = jnp.asarray(inv_ui[perm_iu].astype(np.int32))
+
+        self.ui_indptr = jnp.asarray(ui_indptr)
+        self.ui_src = jnp.asarray(ui_src)                  # user per edge
+        self.ui_dst = jnp.asarray(item[perm_ui])           # item per edge
+        self.iu_indptr = jnp.asarray(iu_indptr)
+        self.iu_src = jnp.asarray(iu_src)                  # item per edge
+        self.iu_dst = jnp.asarray(user[perm_iu])           # user per edge
+
+        du = np.bincount(user, minlength=n_users).astype(np.float32)
+        di = np.bincount(item, minlength=n_items).astype(np.float32)
+        self.rsqrt_du = jnp.asarray(1.0 / np.sqrt(np.maximum(du, 1.0)))
+        self.rsqrt_di = jnp.asarray(1.0 / np.sqrt(np.maximum(di, 1.0)))
+
+        self.agg_u2i = _make_adj_matmul(self.ui_indptr, self.ui_src, n_items,
+                                        self.iu_indptr, self.iu_src, n_users,
+                                        self.impl)
+        self.agg_i2u = _make_adj_matmul(self.iu_indptr, self.iu_src, n_users,
+                                        self.ui_indptr, self.ui_src, n_items,
+                                        self.impl)
+        self.edge_agg_item = _make_edge_agg(self.ui_indptr, self.ui_dst,
+                                            n_items, self.impl)
+        self.edge_agg_user = _make_edge_agg(self.iu_indptr, self.iu_dst,
+                                            n_users, self.impl)
+
+    def graph_nbytes(self) -> int:
+        """Bytes of the adjacency structure (both CSR directions)."""
+        arrs = (self.ui_indptr, self.ui_src, self.ui_dst, self.iu_indptr,
+                self.iu_src, self.iu_dst, self.perm_ui_to_iu)
+        return int(sum(a.size * a.dtype.itemsize for a in arrs))
+
+    def sym_propagate(self, x_user, x_item):
+        """One symmetric-normalized propagation (LightGCN/GCN layer):
+        h_i = sum_e x_u / sqrt(d_u d_i), both directions.  The separable
+        coefficient lets both directions run as unweighted gather-SpMM."""
+        h_item = self.agg_u2i(x_user * self.rsqrt_du[:, None]) \
+            * self.rsqrt_di[:, None]
+        h_user = self.agg_i2u(x_item * self.rsqrt_di[:, None]) \
+            * self.rsqrt_du[:, None]
+        return h_user, h_item

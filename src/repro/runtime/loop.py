@@ -43,15 +43,20 @@ class LoopReport:
 
 def run_training(cfg: LoopConfig, init_state: Any,
                  step_fn: Callable[[Any, int], tuple[Any, float]],
-                 on_relayout: Callable[[Any], Any] | None = None) -> LoopReport:
+                 on_relayout: Callable[[Any], Any] | None = None,
+                 on_restore: Callable[[Any], Any] | None = None) -> LoopReport:
     """step_fn(state, step) -> (state, loss).  Resumes if a checkpoint
-    exists; checkpoints every ``ckpt_every``; final state saved at end."""
+    exists (``on_restore`` post-processes the restored state — e.g.
+    re-applying memory-tier placements that raw checkpoint leaves lose);
+    checkpoints every ``ckpt_every``; final state saved at end."""
     start = 0
     state = init_state
     resumed = None
     if latest_step(cfg.ckpt_dir) is not None:
         state, start = restore_checkpoint(cfg.ckpt_dir, init_state)
         resumed = start
+        if on_restore is not None:
+            state = on_restore(state)
     strays = 0
     relayouts = 0
     losses = []
@@ -79,3 +84,14 @@ def run_training(cfg: LoopConfig, init_state: Any,
         pending.join()
     save_checkpoint(cfg.ckpt_dir, cfg.max_steps, state)
     return LoopReport(cfg.max_steps - start, resumed, strays, relayouts, losses)
+
+
+def run_pipeline(cfg: LoopConfig, pipeline) -> LoopReport:
+    """Drive a ``repro.pipeline.Pipeline`` under the fault-tolerant loop:
+    the pipeline supplies the initial state, the accumulated-microbatch
+    ``step_fn``, ``on_relayout`` (re-runs the tiered-memory planner when
+    the straggler escalation fires), and ``apply_plan`` (restored
+    checkpoint leaves land back on their planned tiers)."""
+    return run_training(cfg, pipeline.init_state(), pipeline.step_fn,
+                        on_relayout=pipeline.on_relayout,
+                        on_restore=pipeline.apply_plan)

@@ -1,9 +1,16 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+Skipped cleanly when hypothesis is absent (it is a dev-only dependency;
+see requirements-dev.txt).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings          # noqa: E402
+from hypothesis import strategies as st         # noqa: E402
 
 from repro.core import sparse_ops
 from repro.core.graph import bipartite_from_numpy
