@@ -1,15 +1,19 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-fast bench-smoke bench train-smoke
+.PHONY: test test-fast test-slow bench-smoke bench train-smoke
 
-# tier-1 suite (the CI gate)
+# tier-1 suite (the CI gate) + pass/fail delta vs the seed baseline
 test:
-	$(PY) -m pytest -x -q
+	$(PY) tools/check_test_delta.py
 
-# skip the slow multi-device subprocess tests
+# fast subset: skip slow property/parity sweeps + multi-device subprocess tests
 test-fast:
-	$(PY) -m pytest -q --ignore=tests/test_distributed.py
+	$(PY) -m pytest -q -m "not slow" --ignore=tests/test_distributed.py
+
+# slow tier: property-based + kernel-parity sweeps (CI's second job)
+test-slow:
+	$(PY) -m pytest -q -m slow
 
 # fast benchmark subset: planner model + placement + memory model
 bench-smoke:

@@ -21,16 +21,12 @@ from repro.pipeline import PipelineConfig, build_pipeline
 
 def _recall(pipe, state, data, train, test):
     ue, ie = pipe.embeddings(state)
-    train_mask = np.zeros((data.n_users, data.n_items), bool)
-    train_mask[train.user, train.item] = True
-    test_pos = [np.zeros(0, np.int64)] * data.n_users
-    by_u = {}
-    for u, i in zip(test.user, test.item):
-        by_u.setdefault(u, []).append(i)
-    for u, items in by_u.items():
-        test_pos[u] = np.asarray(items)
-    return bpr.recall_at_k(np.asarray(ue), np.asarray(ie), train_mask,
-                           test_pos, k=20)
+    test_pos = synth.group_by_user(test.user, test.item, data.n_users)
+    # dense reference oracle, seen-mask via the O(E) user-CSR
+    return bpr.recall_at_k(
+        np.asarray(ue), np.asarray(ie),
+        bpr.build_user_csr(train.user, train.item, data.n_users),
+        test_pos, k=20)
 
 
 def _train(cfg: PipelineConfig, data, train, test, epochs: int):

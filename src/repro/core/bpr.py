@@ -33,12 +33,42 @@ def sample_bpr_batch(rng: np.random.Generator, train_user: np.ndarray,
     return users.astype(np.int32), pos.astype(np.int32), neg.astype(np.int32)
 
 
-def recall_at_k(user_e, item_e, train_mask, test_pos: list[np.ndarray],
+def build_user_csr(user: np.ndarray, item: np.ndarray,
+                   n_users: int) -> tuple[np.ndarray, np.ndarray]:
+    """(indptr, items) user-CSR over interaction edges: items[indptr[u]:
+    indptr[u+1]] are user u's item ids.  O(E) — the mask structure for
+    evaluation/serving (``repro.eval``) and for ``recall_at_k`` below."""
+    user = np.asarray(user)
+    item = np.asarray(item)
+    order = np.argsort(user, kind="stable")
+    indptr = np.zeros(n_users + 1, np.int64)
+    np.add.at(indptr, user + 1, 1)
+    np.cumsum(indptr, out=indptr)
+    return indptr, item[order].astype(np.int64)
+
+
+def recall_at_k(user_e, item_e, train, test_pos: list[np.ndarray],
                 k: int = 20) -> float:
-    """Dense-score recall@k (small graphs).  train_mask[u, i]=True masks
-    seen items; test_pos[u] = array of held-out item ids."""
+    """Dense-score recall@k — the small-graph reference oracle (it still
+    materializes the U×I score matrix; production eval is the streaming
+    path in ``repro.eval``).
+
+    ``train`` masks already-seen items, either as the (indptr, items)
+    user-CSR from ``build_user_csr`` (canonical — O(E)), or as the
+    legacy dense boolean mask [U, I] (back-compat shim; itself O(U×I)).
+    test_pos[u] = array of held-out item ids."""
     scores = np.asarray(user_e @ item_e.T)
-    scores[train_mask] = -np.inf
+    if isinstance(train, np.ndarray):
+        if train.ndim != 2 or train.dtype != bool:
+            raise TypeError("dense train mask must be a 2-D boolean array; "
+                            "pass build_user_csr(...) otherwise")
+        scores[train] = -np.inf            # legacy dense-mask shim
+    else:
+        indptr, items = train
+        indptr = np.asarray(indptr)
+        items = np.asarray(items)
+        rows = np.repeat(np.arange(len(indptr) - 1), np.diff(indptr))
+        scores[rows, items] = -np.inf
     topk = np.argpartition(-scores, min(k, scores.shape[1] - 1), axis=1)[:, :k]
     recalls = []
     for u, pos in enumerate(test_pos):

@@ -85,6 +85,17 @@ def scaled(name: str, target_edges: int, seed: int = 0) -> InteractionData:
                               target_edges, seed=seed)
 
 
+def group_by_user(user: np.ndarray, item: np.ndarray,
+                  n_users: int) -> list[np.ndarray]:
+    """Per-user item lists: out[u] = item ids of user u's interactions
+    (empty array when none).  The held-out ``test_pos`` structure the
+    eval metrics consume — the user-CSR sliced into views, no U×I
+    anything."""
+    from repro.core.bpr import build_user_csr
+    indptr, items = build_user_csr(user, item, n_users)
+    return [items[indptr[u]:indptr[u + 1]] for u in range(n_users)]
+
+
 def train_test_split(data: InteractionData, test_frac: float = 0.1,
                      seed: int = 0):
     """Paper protocol: 90/10 edge split."""

@@ -1,0 +1,19 @@
+"""Streaming top-K evaluation & serving (paper Table 3 / recall@20).
+
+Public surface:
+
+  streaming_topk       — block-merged top-K, never materializes U×I;
+  ranked_hits / ranking_metrics — recall@K, NDCG@K, MRR on one core;
+  evaluate_embeddings  — held-out eval through the streaming path;
+  Recommender          — serving facade: planner-placed embedding
+                         snapshot answering batched top-K queries.
+"""
+from repro.eval.metrics import (evaluate_embeddings, ranked_hits,
+                                ranking_metrics)
+from repro.eval.recommender import Recommender
+from repro.eval.topk import streaming_topk
+
+__all__ = [
+    "streaming_topk", "ranked_hits", "ranking_metrics",
+    "evaluate_embeddings", "Recommender",
+]

@@ -1,0 +1,88 @@
+"""Recommender — the serving facade over trained embeddings.
+
+Snapshots a trained model's final (user, item) embeddings, places them
+across the memory tiers with the same ``TieredMemoryPlanner`` that
+places training tensors (serving traffic profile: the item table is
+streamed block-by-block for every query batch, the user table is only
+row-gathered for the users in the batch), and answers batched top-K
+queries through the streaming scorer — peak memory per query batch is
+``O(batch × (K + block))`` however large the catalogue.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.tiered_memory import HBM_CAPACITY, plan_placement
+from repro.eval.topk import (DEFAULT_ITEM_BLOCK, DEFAULT_USER_BATCH,
+                             streaming_topk)
+from repro.pipeline.plan import host_offload_sharding, serving_profiles
+from repro.pipeline.sparse import default_impl
+
+
+class Recommender:
+    """Batched top-K retrieval over a snapshot of trained embeddings."""
+
+    def __init__(self, user_e, item_e, *, seen_indptr=None, seen_items=None,
+                 k: int = 20, user_batch: int = DEFAULT_USER_BATCH,
+                 item_block: int = DEFAULT_ITEM_BLOCK,
+                 impl: str | None = None, hbm_budget: int | None = None):
+        self.k = int(k)
+        self.user_batch = int(user_batch)
+        self.item_block = int(item_block)
+        self.impl = impl or default_impl()
+        self.seen_indptr = None if seen_indptr is None \
+            else np.asarray(seen_indptr, np.int64)
+        self.seen_items = None if seen_items is None \
+            else np.asarray(seen_items, np.int64)
+
+        user_e = jax.numpy.asarray(user_e)
+        item_e = jax.numpy.asarray(item_e)
+        budget = int(hbm_budget) if hbm_budget is not None else HBM_CAPACITY
+        row = int(item_e.shape[-1]) * item_e.dtype.itemsize
+        profs = serving_profiles(user_e.size * user_e.dtype.itemsize,
+                                 item_e.size * item_e.dtype.itemsize, row)
+        self.plan = plan_placement(profs, hbm_budget=budget)
+        host = host_offload_sharding()
+        self.n_offloaded = 0
+        for name, table in (("serve/user_embed", user_e),
+                            ("serve/item_embed", item_e)):
+            if host is not None and self.plan.tier(name) == "host":
+                table = jax.device_put(table, host)
+                self.n_offloaded += 1
+            if name.endswith("user_embed"):
+                self.user_e = table
+            else:
+                self.item_e = table
+        self.n_users = int(self.user_e.shape[0])
+        self.n_items = int(self.item_e.shape[0])
+
+    @classmethod
+    def from_pipeline(cls, pipeline, state, **kw) -> "Recommender":
+        """Snapshot a trained ``repro.pipeline.Pipeline``: final forward
+        embeddings + the train CSR as the seen-item exclusion set."""
+        user_e, item_e = pipeline.embeddings(state)
+        indptr, items = pipeline.g.seen_csr()
+        kw.setdefault("impl", pipeline.plan.impl)
+        return cls(user_e, item_e, seen_indptr=indptr, seen_items=items, **kw)
+
+    def recommend(self, user_ids, k: int | None = None,
+                  exclude_seen: bool = True):
+        """Top-K (ids, scores) for a batch of user ids.  Invalid slots
+        (fewer than K unseen candidates) are (-1, -inf)."""
+        k = self.k if k is None else int(k)
+        si, sv = (self.seen_indptr, self.seen_items) if exclude_seen \
+            else (None, None)
+        scores, ids = streaming_topk(
+            self.user_e, self.item_e, k, user_ids=np.asarray(user_ids),
+            seen_indptr=si, seen_items=sv, user_batch=self.user_batch,
+            item_block=self.item_block, impl=self.impl)
+        return ids, scores
+
+    def describe(self) -> str:
+        tiers = {n: p.tier for n, p in self.plan.placements.items()}
+        return (f"Recommender[{self.n_users}U x {self.n_items}I] "
+                f"impl={self.impl} k={self.k} block={self.item_block} "
+                f"user_embed->{tiers['serve/user_embed']} "
+                f"item_embed->{tiers['serve/item_embed']} "
+                f"(offloaded={self.n_offloaded})")

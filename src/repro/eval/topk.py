@@ -1,0 +1,161 @@
+"""Streaming top-K scorer — recommendation eval/serving without the dense
+score matrix.
+
+``bpr.recall_at_k`` materializes the full ``U×I`` score matrix, which is
+exactly the memory blow-up the paper's tiered design exists to avoid
+(and a dead end at the "millions of users" serving scale).  This module
+scores users in fixed-size microbatches against *item blocks*:
+
+  * each (user-batch × item-block) score tile is a small dense matmul
+    whose row gathers ride the same kernel dispatch as training
+    (``kernels.ops.embedding_bag`` → Pallas on TPU, XLA oracle
+    elsewhere), so serving traffic hits the capacity tier through the
+    same DMA path the planner already costs;
+  * already-seen train items are masked per block through the user-CSR
+    structure — a scatter of each user's in-block item ids, never a
+    dense ``U×I`` boolean mask;
+  * a running per-user top-K carry merges each block via
+    ``jax.lax.top_k`` over the concatenated ``[carry ‖ block]`` scores.
+
+Peak device memory is therefore ``O(batch × (K + block))`` regardless of
+catalogue size.
+
+Tie-breaking contract (pinned by tests/test_eval.py): results are
+ordered by (score desc, item id asc) — identical to a stable dense
+argsort — because ``lax.top_k`` breaks ties in favour of lower indices,
+the carry precedes the block in the concatenation, block item ids are
+ascending, and earlier blocks hold lower ids.  Slots with fewer than K
+scoreable candidates (catalogue smaller than K, or everything masked)
+return id -1 with score -inf.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.pipeline.sparse import default_impl
+
+NEG_INF = float("-inf")
+DEFAULT_USER_BATCH = 256
+DEFAULT_ITEM_BLOCK = 1024
+
+
+def _gather_rows(table, ids, impl: str):
+    """Row gather through the kernel dispatch (bag of length 1)."""
+    ids = jnp.asarray(ids, jnp.int32)[:, None]
+    mask = jnp.ones_like(ids, dtype=bool)
+    return kops.embedding_bag(table, ids, mask, "sum", impl=impl)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _merge_block(ue, ie_blk, block_ids, seen, seen_mask, start,
+                 carry_s, carry_i, *, k: int):
+    """One streamed block: score, mask seen via scatter, top-k merge."""
+    b = ue.shape[0]
+    blk = ie_blk.shape[0]
+    scores = ue @ ie_blk.T                                  # [B, blk]
+    # canonicalize -0.0 -> +0.0: lax.top_k sorts by IEEE total order
+    # (-0.0 < +0.0) while comparison-based dense sorts treat them as a
+    # tie — the (score desc, id asc) contract needs one behaviour
+    scores = jnp.where(scores == 0.0, 0.0, scores)
+    scores = jnp.where(block_ids[None, :] >= 0, scores, NEG_INF)
+    # seen-item mask: scatter each user's in-block train items; the
+    # extra column absorbs out-of-block ids (always in-bounds scatter)
+    pos = seen - start                                      # [B, L]
+    in_block = seen_mask & (pos >= 0) & (pos < blk)
+    cols = jnp.where(in_block, pos, blk)
+    rows = jnp.broadcast_to(jnp.arange(b)[:, None], cols.shape)
+    hit = jnp.zeros((b, blk + 1), bool).at[rows, cols].set(True)[:, :blk]
+    scores = jnp.where(hit, NEG_INF, scores)
+    cat_s = jnp.concatenate([carry_s, scores], axis=1)
+    cat_i = jnp.concatenate(
+        [carry_i, jnp.broadcast_to(block_ids[None, :], scores.shape)], axis=1)
+    top_s, idx = jax.lax.top_k(cat_s, k)
+    return top_s, jnp.take_along_axis(cat_i, idx, axis=1)
+
+
+def _padded_seen(user_ids: np.ndarray, indptr: np.ndarray, items: np.ndarray,
+                 pad_to: int):
+    """Ragged CSR rows -> padded [n, pad_to] ids + validity mask.
+    ``pad_to`` is fixed per eval sweep so the jitted merge traces once."""
+    deg = np.diff(indptr)[user_ids]
+    if pad_to == 0 or len(items) == 0:
+        n = len(user_ids)
+        return (np.zeros((n, 0), np.int32), np.zeros((n, 0), bool))
+    col = np.arange(pad_to)[None, :]
+    mask = col < deg[:, None]
+    idx = np.minimum(indptr[user_ids][:, None] + col, len(items) - 1)
+    padded = np.where(mask, items[idx], 0).astype(np.int32)
+    return padded, mask
+
+
+def streaming_topk(user_e, item_e, k: int, *, user_ids=None,
+                   seen_indptr=None, seen_items=None,
+                   user_batch: int = DEFAULT_USER_BATCH,
+                   item_block: int = DEFAULT_ITEM_BLOCK,
+                   impl: str | None = None):
+    """Top-K items per user without materializing the U×I score matrix.
+
+    user_e, item_e: [U, D] / [I, D] embedding tables (any tier).
+    user_ids: which users to score (default: all rows of user_e).
+    seen_indptr/seen_items: user-CSR of already-seen (train) items to
+      exclude, by global user id (``BipartiteCSR.seen_csr()`` or
+      ``bpr.build_user_csr``).  None -> nothing excluded.
+    Returns (scores f32[n, k], ids i32[n, k]) numpy arrays, ordered by
+    (score desc, id asc); invalid slots are (-inf, -1).
+    """
+    impl = impl or default_impl()
+    user_e = jnp.asarray(user_e)
+    item_e = jnp.asarray(item_e)
+    n_items = int(item_e.shape[0])
+    if user_ids is None:
+        user_ids = np.arange(user_e.shape[0], dtype=np.int32)
+    user_ids = np.asarray(user_ids, np.int32)
+    n_q = len(user_ids)
+    k = int(k)
+    if n_q == 0 or n_items == 0:
+        return (np.full((n_q, k), NEG_INF, np.float32),
+                np.full((n_q, k), -1, np.int32))
+    ub = int(min(user_batch, n_q))
+    blk = int(min(item_block, n_items))
+    n_blocks = math.ceil(n_items / blk)
+
+    max_deg = 0
+    if seen_indptr is not None:
+        seen_indptr = np.asarray(seen_indptr, np.int64)
+        seen_items = np.asarray(seen_items, np.int64)
+        max_deg = int(np.diff(seen_indptr)[user_ids].max())
+    out_s = np.full((n_q, k), NEG_INF, np.float32)
+    out_i = np.full((n_q, k), -1, np.int32)
+
+    for lo in range(0, n_q, ub):
+        sel = user_ids[lo:lo + ub]
+        b = len(sel)
+        sel_p = np.pad(sel, (0, ub - b))        # pad batch: static jit shape
+        ue = _gather_rows(user_e, sel_p, impl)
+        if seen_indptr is not None:
+            seen, smask = _padded_seen(sel_p, seen_indptr, seen_items, max_deg)
+        else:
+            seen = np.zeros((ub, 0), np.int32)
+            smask = np.zeros((ub, 0), bool)
+        seen_d = jnp.asarray(seen)
+        smask_d = jnp.asarray(smask)
+        carry_s = jnp.full((ub, k), NEG_INF, jnp.float32)
+        carry_i = jnp.full((ub, k), -1, jnp.int32)
+        for b0 in range(0, n_blocks * blk, blk):
+            ids_np = np.arange(b0, b0 + blk)
+            valid = ids_np < n_items
+            block_ids = jnp.asarray(
+                np.where(valid, ids_np, -1).astype(np.int32))
+            ie_blk = _gather_rows(item_e, np.where(valid, ids_np, 0), impl)
+            carry_s, carry_i = _merge_block(
+                ue, ie_blk, block_ids, seen_d, smask_d, jnp.int32(b0),
+                carry_s, carry_i, k=k)
+        out_s[lo:lo + b] = np.asarray(carry_s)[:b]
+        out_i[lo:lo + b] = np.asarray(carry_i)[:b]
+    return out_s, out_i

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as config_registry
-from repro.checkpoint import latest_step
+from repro.checkpoint import latest_step, restore_checkpoint
 from repro.data import synth
 from repro.optim import adam
 from repro.pipeline import PipelineConfig, build_pipeline
@@ -36,18 +36,23 @@ def train_gnnrecsys(arch: str, steps: int, ckpt_dir: str,
                     target_batch: int = 2048, microbatch: int | None = 512,
                     base_batch: int = 512, edges: int = 4000,
                     embed_dim: int = 32, layers: int = 2,
-                    hbm_budget: int | None = None):
+                    hbm_budget: int | None = None,
+                    eval_every: int | None = None, eval_k: int = 20):
     """Full-graph BPR training through the unified pipeline on a synthetic
-    graph matching the paper's dataset statistics."""
+    graph matching the paper's dataset statistics.  The held-out split is
+    evaluated through the streaming top-K path (``repro.eval``) every
+    ``eval_every`` steps and once at the end."""
     data = synth.scaled("movielens-10m", edges, seed=0)
-    train, _test = synth.train_test_split(data)
+    train, test = synth.train_test_split(data)
     cfg = PipelineConfig(arch=arch, embed_dim=embed_dim, n_layers=layers,
                          base_batch=base_batch, target_batch=target_batch,
-                         microbatch=microbatch, hbm_budget=hbm_budget)
-    pipe = build_pipeline(cfg, train)
+                         microbatch=microbatch, hbm_budget=hbm_budget,
+                         eval_k=eval_k)
+    pipe = build_pipeline(cfg, train, holdout=test)
     print(pipe.plan.describe())
     loop_cfg = LoopConfig(ckpt_dir=ckpt_dir, ckpt_every=max(steps // 2, 1),
-                          max_steps=steps, async_ckpt=False)
+                          max_steps=steps, async_ckpt=False,
+                          eval_every=eval_every)
     t0 = time.perf_counter()
     report = run_pipeline(loop_cfg, pipe)
     dt = time.perf_counter() - t0
@@ -56,7 +61,16 @@ def train_gnnrecsys(arch: str, steps: int, ckpt_dir: str,
           f"(microbatch={pipe.plan.microbatch}, "
           f"accum={pipe.plan.microbatches_for_epoch(pipe.loader.state.epoch)}x, "
           f"resumed_from={report.resumed_from})")
+    for step, m in report.eval_history:
+        print(f"  eval@{step}: {_fmt_metrics(m)}")
+    state, _ = restore_checkpoint(ckpt_dir, pipe.init_state())
+    final = pipe.evaluate(pipe.apply_plan(state))
+    print(f"[{arch}] final held-out: {_fmt_metrics(final)}")
     return report
+
+
+def _fmt_metrics(m: dict) -> str:
+    return " ".join(f"{k}={v:.4f}" for k, v in sorted(m.items()))
 
 
 def _loss_span(report) -> str:
@@ -152,13 +166,19 @@ def main():
     ap.add_argument("--edges", type=int, default=4000)
     ap.add_argument("--embed-dim", type=int, default=32)
     ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="held-out streaming-eval cadence in steps; "
+                         "0 = final eval only")
+    ap.add_argument("--eval-k", type=int, default=20)
     args = ap.parse_args()
     if args.arch in PIPELINE_ARCHS:
         train_gnnrecsys(args.arch, args.steps, f"{args.ckpt_dir}/{args.arch}",
                         target_batch=args.target_batch,
                         microbatch=args.microbatch or None,
                         edges=args.edges, embed_dim=args.embed_dim,
-                        layers=args.layers)
+                        layers=args.layers,
+                        eval_every=args.eval_every or None,
+                        eval_k=args.eval_k)
         return
     arch = config_registry.canon(args.arch)
     if arch == "gcn_cora":

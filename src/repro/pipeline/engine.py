@@ -57,12 +57,18 @@ class PipelineConfig:
     hbm_budget: int | None = None      # planner budget override (bytes)
     impl: str | None = None            # kernel dispatch override
     seed: int = 0
+    # held-out streaming evaluation (repro.eval); cadence lives in the
+    # loop's LoopConfig.eval_every — these shape one eval sweep
+    eval_k: int = 20
+    eval_user_batch: int | None = None  # None -> derived from HBM headroom
+    eval_item_block: int = 1024
 
 
 class Pipeline:
     """One training run: state, plan, and the step the loop executes."""
 
-    def __init__(self, cfg: PipelineConfig, train: InteractionData):
+    def __init__(self, cfg: PipelineConfig, train: InteractionData,
+                 holdout: InteractionData | None = None):
         self.cfg = cfg
         self.spec = get_model(cfg.arch)
         impl = cfg.impl or default_impl()
@@ -110,6 +116,11 @@ class Pipeline:
 
         self._micro_value_and_grad = micro_value_and_grad
         self._apply_update = apply_update
+
+        self.eval_fn = None                # (state, step) -> metrics dict
+        self._test_pos = None
+        if holdout is not None:
+            self.attach_holdout(holdout)
 
     # ---------------------------------------------------------------- state
     def init_state(self):
@@ -253,6 +264,46 @@ class Pipeline:
         """Final (user, item) embeddings for evaluation."""
         return self.spec.forward(state["params"], self.g, self.cfg.n_layers)
 
+    def attach_holdout(self, holdout: InteractionData) -> None:
+        """Enable periodic held-out evaluation: sets ``eval_fn`` (which
+        the fault-tolerant loop calls every ``LoopConfig.eval_every``
+        steps, appending to the report's metric history).  Evaluation
+        rides the streaming top-K path — train items masked via the CSR
+        structure, never a dense U×I matrix."""
+        from repro.data.synth import group_by_user
+        self._test_pos = group_by_user(holdout.user, holdout.item,
+                                       self.g.n_users)
 
-def build_pipeline(cfg: PipelineConfig, train: InteractionData) -> Pipeline:
-    return Pipeline(cfg, train)
+        def eval_fn(state, step):
+            return self.evaluate(state)
+
+        self.eval_fn = eval_fn
+
+    def eval_user_batch(self) -> int:
+        """User microbatch for one eval sweep: configured, or derived
+        from the HBM left after the training plan's placements."""
+        if self.cfg.eval_user_batch is not None:
+            return int(self.cfg.eval_user_batch)
+        from repro.pipeline.plan import derive_eval_batch
+        free = self.plan.hbm_budget - self.plan.plan.hbm_used
+        return derive_eval_batch(free, self.out_dim(), self.cfg.eval_k,
+                                 self.cfg.eval_item_block)
+
+    def evaluate(self, state) -> dict:
+        """One held-out eval sweep (recall/NDCG@eval_k + MRR) through
+        ``repro.eval`` on the current state."""
+        if self._test_pos is None:
+            raise RuntimeError("no holdout attached; call attach_holdout")
+        from repro.eval import evaluate_embeddings   # lazy: engine<->eval
+        ue, ie = self.embeddings(state)
+        indptr, items = self.g.seen_csr()
+        return evaluate_embeddings(
+            ue, ie, self._test_pos, k=self.cfg.eval_k,
+            seen_indptr=indptr, seen_items=items,
+            user_batch=self.eval_user_batch(),
+            item_block=self.cfg.eval_item_block, impl=self.plan.impl)
+
+
+def build_pipeline(cfg: PipelineConfig, train: InteractionData,
+                   holdout: InteractionData | None = None) -> Pipeline:
+    return Pipeline(cfg, train, holdout=holdout)

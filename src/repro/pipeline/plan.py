@@ -74,6 +74,34 @@ def derive_microbatch(free_hbm: int, out_dim: int, target_batch: int,
     return int(min(mu, target_batch))
 
 
+def derive_eval_batch(free_hbm: int, out_dim: int, k: int, item_block: int,
+                      floor: int = 32, cap: int = 4096) -> int:
+    """Largest power-of-two user microbatch for streaming eval/serving:
+    per user the carry, one score block, and the concat double-buffer —
+    ``(K + 2·block + D) · 4B`` — must fit the HBM left after placement."""
+    per_user = (k + 2 * item_block + out_dim) * 4
+    b = max(int(free_hbm) // max(per_user, 1), floor)
+    b = 1 << (b.bit_length() - 1)            # pow2 floor
+    return int(min(b, cap))
+
+
+def serving_profiles(user_nbytes: int, item_nbytes: int, row: int,
+                     user_fraction: float = 0.05) -> list[AccessProfile]:
+    """AccessProfiles for the serving snapshot: every query batch streams
+    the full item table block-by-block (read 1.0×/step), but gathers only
+    the batch's rows of the user table (``user_fraction``×/step) — so
+    under a tight budget the planner demotes the user table first,
+    mirroring RecNMP's observation that item-side traffic dominates."""
+    return [
+        AccessProfile("serve/user_embed", int(user_nbytes),
+                      reads_per_step=user_fraction, writes_per_step=0.0,
+                      access_size=row),
+        AccessProfile("serve/item_embed", int(item_nbytes),
+                      reads_per_step=1.0, writes_per_step=0.0,
+                      access_size=row),
+    ]
+
+
 @dataclasses.dataclass
 class TrainPlan:
     """Everything the engine needs to run one training configuration."""
@@ -122,7 +150,7 @@ def build_train_plan(arch: str, spec: ModelSpec, params, opt_state,
 
 
 # ---------------------------------------------------------------- placement
-def _host_offload_sharding():
+def host_offload_sharding():
     """A sharding that pins to the host memory tier, when the backend has
     one (TPU); None on backends without memory kinds (CPU tests)."""
     try:
@@ -141,7 +169,7 @@ def apply_placements(state, plan: Plan) -> tuple[object, int]:
     (state, n_offloaded).  No-op (0 offloaded) when the backend has no
     host memory kind — the plan still documents intent and drives the
     microbatch, which is what the CPU CI exercises."""
-    host = _host_offload_sharding()
+    host = host_offload_sharding()
     if host is None:
         return state, 0
 

@@ -112,6 +112,10 @@ class BipartiteCSR:
 
         ui_indptr, ui_src, perm_ui = build_csr_by_dst(item, user, n_items)
         iu_indptr, iu_src, perm_iu = build_csr_by_dst(user, item, n_users)
+        # host copies of the user-CSR: the eval/serving seen-item mask is
+        # built from these (O(E) structure, never a dense U×I mask)
+        self._seen_indptr = np.asarray(iu_indptr, np.int64)
+        self._seen_items = np.asarray(iu_src, np.int64)
         inv_ui = np.empty(self.n_edges, np.int64)
         inv_ui[perm_ui] = np.arange(self.n_edges)
         self.perm_ui_to_iu = jnp.asarray(inv_ui[perm_iu].astype(np.int32))
@@ -138,6 +142,13 @@ class BipartiteCSR:
                                             n_items, self.impl)
         self.edge_agg_user = _make_edge_agg(self.iu_indptr, self.iu_dst,
                                             n_users, self.impl)
+
+    def seen_csr(self) -> tuple[np.ndarray, np.ndarray]:
+        """(indptr, items) numpy user-CSR over the train interactions —
+        the exclusion structure for streaming eval and serving
+        (``repro.eval``): items[indptr[u]:indptr[u+1]] are user u's
+        already-seen item ids."""
+        return self._seen_indptr, self._seen_items
 
     def graph_nbytes(self) -> int:
         """Bytes of the adjacency structure (both CSR directions)."""

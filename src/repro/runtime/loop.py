@@ -30,6 +30,7 @@ class LoopConfig:
     step_deadline_s: float | None = None
     max_strays: int = 3
     async_ckpt: bool = True
+    eval_every: int | None = None   # held-out eval cadence (steps); None=off
 
 
 @dataclasses.dataclass
@@ -39,16 +40,23 @@ class LoopReport:
     stray_steps: int
     relayout_requests: int
     losses: list
+    # (step, metrics dict) per eval_every firing — the train-time metric
+    # history (paper Table 3's recall@20 tracked during training)
+    eval_history: list = dataclasses.field(default_factory=list)
 
 
 def run_training(cfg: LoopConfig, init_state: Any,
                  step_fn: Callable[[Any, int], tuple[Any, float]],
                  on_relayout: Callable[[Any], Any] | None = None,
-                 on_restore: Callable[[Any], Any] | None = None) -> LoopReport:
+                 on_restore: Callable[[Any], Any] | None = None,
+                 eval_fn: Callable[[Any, int], dict] | None = None
+                 ) -> LoopReport:
     """step_fn(state, step) -> (state, loss).  Resumes if a checkpoint
     exists (``on_restore`` post-processes the restored state — e.g.
     re-applying memory-tier placements that raw checkpoint leaves lose);
-    checkpoints every ``ckpt_every``; final state saved at end."""
+    checkpoints every ``ckpt_every``; final state saved at end.
+    ``eval_fn(state, step) -> metrics`` fires every ``cfg.eval_every``
+    steps and its results accumulate in ``LoopReport.eval_history``."""
     start = 0
     state = init_state
     resumed = None
@@ -60,12 +68,16 @@ def run_training(cfg: LoopConfig, init_state: Any,
     strays = 0
     relayouts = 0
     losses = []
+    evals = []
     pending = None
     for step in range(start, cfg.max_steps):
         t0 = time.perf_counter()
         state, loss = step_fn(state, step)
         dt = time.perf_counter() - t0
         losses.append(float(loss))
+        if (eval_fn is not None and cfg.eval_every
+                and (step + 1) % cfg.eval_every == 0):
+            evals.append((step + 1, eval_fn(state, step + 1)))
         if cfg.step_deadline_s is not None and dt > cfg.step_deadline_s:
             strays += 1
             if strays >= cfg.max_strays:
@@ -83,7 +95,8 @@ def run_training(cfg: LoopConfig, init_state: Any,
     if pending is not None:
         pending.join()
     save_checkpoint(cfg.ckpt_dir, cfg.max_steps, state)
-    return LoopReport(cfg.max_steps - start, resumed, strays, relayouts, losses)
+    return LoopReport(cfg.max_steps - start, resumed, strays, relayouts,
+                      losses, evals)
 
 
 def run_pipeline(cfg: LoopConfig, pipeline) -> LoopReport:
@@ -94,4 +107,5 @@ def run_pipeline(cfg: LoopConfig, pipeline) -> LoopReport:
     checkpoint leaves land back on their planned tiers)."""
     return run_training(cfg, pipeline.init_state(), pipeline.step_fn,
                         on_relayout=pipeline.on_relayout,
-                        on_restore=pipeline.apply_plan)
+                        on_restore=pipeline.apply_plan,
+                        eval_fn=getattr(pipeline, "eval_fn", None))

@@ -1,0 +1,309 @@
+"""Streaming top-K eval/serving vs the dense oracle — bit-for-bit.
+
+Strategy: integer-valued embeddings make every user-item dot product
+exactly representable in float32 regardless of summation order, so the
+streamed block-merged ranking must equal a stable dense argsort
+*exactly* — including tie handling (ties are common with integer
+scores, which is the point: the (score desc, id asc) contract is
+actually exercised).  On top of id equality, the metrics computed from
+both rankings must be identical floats.
+
+Property sweeps run under hypothesis when it is installed (see
+requirements-dev.txt) and fall back to a seeded random sweep otherwise,
+so the invariants are exercised either way.  The sweeps cover the
+adversarial cases from the issue: K > candidate count, users with zero
+test items, block sizes that don't divide the item count, fully-masked
+users.
+"""
+import numpy as np
+import pytest
+
+from repro.core import bpr
+from repro.data import synth
+from repro.eval import (Recommender, evaluate_embeddings, ranked_hits,
+                        ranking_metrics, streaming_topk)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _property(n_examples: int = 30):
+    """Run the wrapped ``f(seed)`` under hypothesis when available, else
+    as a seeded sweep — the property is checked either way."""
+    def deco(f):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=n_examples, deadline=None)(
+                given(seed=st.integers(0, 2**16))(f))
+        return pytest.mark.parametrize("seed", range(n_examples))(f)
+    return deco
+
+
+# ------------------------------------------------------------ case builder
+def _random_case(seed: int):
+    rng = np.random.default_rng(seed)
+    nu = int(rng.integers(2, 20))
+    ni = int(rng.integers(2, 26))
+    d = int(rng.integers(1, 9))
+    k = int(rng.integers(1, ni + 6))            # sometimes > catalogue
+    blk = int(rng.integers(1, ni + 4))          # rarely divides ni
+    ub = int(rng.integers(1, nu + 3))
+    ue = rng.integers(-4, 5, (nu, d)).astype(np.float32)
+    ie = rng.integers(-4, 5, (ni, d)).astype(np.float32)
+    # random unique train edges (some users fully saturated sometimes)
+    ne = int(rng.integers(0, nu * ni // 2 + 1))
+    keys = np.unique(rng.integers(0, nu * ni, ne)) if ne else \
+        np.zeros(0, np.int64)
+    user = (keys // ni).astype(np.int64)
+    item = (keys % ni).astype(np.int64)
+    indptr, items = bpr.build_user_csr(user, item, nu)
+    # random held-out lists; many users get none
+    test_pos = []
+    for u in range(nu):
+        t = int(rng.integers(0, 4))
+        test_pos.append(np.unique(rng.integers(0, ni, t)) if t else
+                        np.zeros(0, np.int64))
+    return ue, ie, indptr, items, test_pos, k, blk, ub
+
+
+def _dense_oracle_topk(ue, ie, indptr, items, k):
+    """Stable dense ranking: (score desc, id asc); seen -> -inf; slots
+    beyond the scoreable candidates are (-inf, -1); padded to k."""
+    scores = (ue @ ie.T).astype(np.float32)
+    rows = np.repeat(np.arange(len(indptr) - 1), np.diff(indptr))
+    scores[rows, items] = -np.inf
+    ni = scores.shape[1]
+    kk = min(k, ni)
+    order = np.argsort(-scores, axis=1, kind="stable")[:, :kk]
+    vals = np.take_along_axis(scores, order, axis=1)
+    ids = np.where(np.isneginf(vals), -1, order).astype(np.int32)
+    vals = np.where(ids < 0, -np.inf, vals).astype(np.float32)
+    pad = k - kk
+    if pad:
+        ids = np.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+        vals = np.pad(vals, ((0, 0), (0, pad)), constant_values=-np.inf)
+    return vals, ids
+
+
+def _check_streamed_equals_oracle(seed: int):
+    ue, ie, indptr, items, test_pos, k, blk, ub = _random_case(seed)
+    got_s, got_i = streaming_topk(ue, ie, k, seen_indptr=indptr,
+                                  seen_items=items, user_batch=ub,
+                                  item_block=blk)
+    want_s, want_i = _dense_oracle_topk(ue, ie, indptr, items, k)
+    np.testing.assert_array_equal(got_i, want_i)
+    np.testing.assert_array_equal(got_s, want_s)      # exact, incl. -inf
+    m_got = ranking_metrics(got_i, test_pos, ks=(1, min(k, 5), k))
+    m_want = ranking_metrics(want_i, test_pos, ks=(1, min(k, 5), k))
+    assert m_got == m_want                            # bit-for-bit floats
+
+
+# --------------------------------------------------------------- properties
+@pytest.mark.slow
+@_property(30)
+def test_streamed_topk_matches_dense_oracle(seed):
+    _check_streamed_equals_oracle(seed)
+
+
+def test_streamed_topk_matches_dense_oracle_smoke():
+    """Tier-1 pin of the property (three fixed seeds)."""
+    for seed in (0, 1, 2):
+        _check_streamed_equals_oracle(seed)
+
+
+# ----------------------------------------------------------- directed edges
+def test_k_exceeds_catalogue_pads_invalid_slots():
+    rng = np.random.default_rng(3)
+    ue = rng.integers(-3, 4, (4, 3)).astype(np.float32)
+    ie = rng.integers(-3, 4, (5, 3)).astype(np.float32)
+    s, ids = streaming_topk(ue, ie, 9, item_block=2)
+    assert ids.shape == (4, 9)
+    assert (ids[:, :5] >= 0).all() and (ids[:, 5:] == -1).all()
+    assert np.isneginf(s[:, 5:]).all()
+    # every catalogue item appears exactly once per user
+    for row in ids[:, :5]:
+        assert sorted(row.tolist()) == [0, 1, 2, 3, 4]
+
+
+def test_empty_catalogue_returns_invalid_slots():
+    s, ids = streaming_topk(np.ones((3, 2), np.float32),
+                            np.zeros((0, 2), np.float32), 4)
+    assert ids.shape == (3, 4) and (ids == -1).all()
+    assert np.isneginf(s).all()
+
+
+def test_fully_masked_user_returns_no_items():
+    ue = np.ones((2, 2), np.float32)
+    ie = np.ones((3, 2), np.float32)
+    # user 0 has seen the whole catalogue, user 1 nothing
+    indptr, items = bpr.build_user_csr(
+        np.array([0, 0, 0]), np.array([0, 1, 2]), 2)
+    _, ids = streaming_topk(ue, ie, 2, seen_indptr=indptr, seen_items=items,
+                            item_block=2)
+    assert (ids[0] == -1).all()
+    assert (ids[1] >= 0).all()
+
+
+def test_block_not_dividing_catalogue():
+    rng = np.random.default_rng(7)
+    ue = rng.integers(-4, 5, (3, 4)).astype(np.float32)
+    ie = rng.integers(-4, 5, (11, 4)).astype(np.float32)
+    for blk in (1, 2, 3, 4, 7, 11, 13):
+        _, ids = streaming_topk(ue, ie, 4, item_block=blk)
+        _, want = _dense_oracle_topk(
+            ue, ie, np.zeros(4, np.int64), np.zeros(0, np.int64), 4)
+        np.testing.assert_array_equal(ids, want)
+
+
+def test_streaming_handles_catalogue_too_big_for_dense():
+    """A catalogue where the dense U×I score matrix would be ~22 GiB:
+    the streaming path scores a query batch in O(batch × (K + block))."""
+    rng = np.random.default_rng(11)
+    nu, ni, d = 60_000, 100_000, 8
+    ue = rng.standard_normal((64, d)).astype(np.float32)   # queried users
+    ie = rng.standard_normal((ni, d)).astype(np.float32)
+    full_u = np.zeros((nu, d), np.float32)
+    full_u[:64] = ue
+    s, ids = streaming_topk(full_u, ie, 10, user_ids=np.arange(64),
+                            user_batch=64, item_block=4096)
+    assert ids.shape == (64, 10)
+    assert (ids >= 0).all()
+    # descending scores per row
+    assert (np.diff(s, axis=1) <= 0).all()
+
+
+# ------------------------------------------------------------------ metrics
+def test_metrics_hand_computed():
+    topk = np.array([[3, 1, 2]], np.int32)
+    test_pos = [np.array([1, 7])]
+    m = ranking_metrics(topk, test_pos, ks=(3,))
+    assert m["recall@3"] == pytest.approx(0.5)
+    dcg = 1.0 / np.log2(3.0)                   # hit at rank 2
+    idcg = 1.0 + 1.0 / np.log2(3.0)            # min(|test|=2, k)=2 ideal
+    assert m["ndcg@3"] == pytest.approx(dcg / idcg)
+    assert m["mrr"] == pytest.approx(0.5)
+
+
+def test_metrics_exclude_zero_test_users_and_invalid_slots():
+    topk = np.array([[0, 1], [-1, -1], [1, 0]], np.int32)
+    test_pos = [np.array([0]), np.zeros(0, np.int64), np.array([2])]
+    m = ranking_metrics(topk, test_pos, ks=(2,))
+    # user 1 (no test items) excluded; user 2 has no hits
+    assert m["recall@2"] == pytest.approx(0.5)
+    assert m["mrr"] == pytest.approx(0.5)
+    hits = ranked_hits(topk, test_pos)
+    assert hits.sum() == 1
+
+
+def test_evaluate_embeddings_empty_test():
+    ue = np.ones((3, 2), np.float32)
+    ie = np.ones((4, 2), np.float32)
+    m = evaluate_embeddings(ue, ie, [np.zeros(0, np.int64)] * 3, k=2)
+    assert m == {"recall@2": 0.0, "ndcg@2": 0.0, "mrr": 0.0}
+
+
+# ---------------------------------------------------- recall_at_k CSR + shim
+@pytest.mark.slow
+@_property(20)
+def test_recall_at_k_csr_matches_dense_shim(seed):
+    ue, ie, indptr, items, test_pos, k, _, _ = _random_case(seed)
+    nu, ni = ue.shape[0], ie.shape[0]
+    mask = np.zeros((nu, ni), bool)
+    rows = np.repeat(np.arange(nu), np.diff(indptr))
+    mask[rows, items] = True
+    # both paths mask the same cells of an identical score matrix, so the
+    # results must agree exactly even through argpartition ties
+    r_csr = bpr.recall_at_k(ue, ie, (indptr, items), test_pos, k=k)
+    r_dense = bpr.recall_at_k(ue, ie, mask, test_pos, k=k)
+    assert r_csr == r_dense
+
+
+def test_recall_at_k_rejects_non_mask_array():
+    with pytest.raises(TypeError):
+        bpr.recall_at_k(np.ones((2, 2), np.float32),
+                        np.ones((2, 2), np.float32),
+                        np.zeros((2, 2), np.float32),  # not bool
+                        [np.array([0]), np.array([1])])
+
+
+def test_streaming_recall_matches_dense_oracle_on_floats():
+    """Cross-implementation sanity on real (float) embeddings: streamed
+    recall@20 == the dense recall_at_k oracle (fixed seed, small graph,
+    scores well-separated at this scale)."""
+    data = synth.generate_bipartite(40, 30, 300, seed=5)
+    train, test = synth.train_test_split(data)
+    rng = np.random.default_rng(5)
+    ue = rng.standard_normal((data.n_users, 16)).astype(np.float32)
+    ie = rng.standard_normal((data.n_items, 16)).astype(np.float32)
+    csr = bpr.build_user_csr(train.user, train.item, data.n_users)
+    test_pos = synth.group_by_user(test.user, test.item, data.n_users)
+    m = evaluate_embeddings(ue, ie, test_pos, k=20, seen_indptr=csr[0],
+                            seen_items=csr[1], user_batch=7, item_block=13)
+    r = bpr.recall_at_k(ue, ie, csr, test_pos, k=20)
+    assert m["recall@20"] == pytest.approx(r, abs=1e-12)
+
+
+# ------------------------------------------------------------------ serving
+def test_recommender_from_pipeline_and_seen_exclusion():
+    from repro.pipeline import PipelineConfig, build_pipeline
+    data = synth.generate_bipartite(30, 25, 250, seed=2)
+    train, test = synth.train_test_split(data)
+    cfg = PipelineConfig(arch="lightgcn", embed_dim=8, n_layers=1,
+                         base_batch=64, target_batch=64, microbatch=64)
+    pipe = build_pipeline(cfg, train)
+    state = pipe.init_state()
+    rec = Recommender.from_pipeline(pipe, state, k=5, item_block=7)
+    ids, scores = rec.recommend(np.arange(data.n_users))
+    assert ids.shape == (data.n_users, 5)
+    indptr, items = pipe.g.seen_csr()
+    for u in range(data.n_users):
+        seen = set(items[indptr[u]:indptr[u + 1]].tolist())
+        got = set(int(i) for i in ids[u] if i >= 0)
+        assert not (got & seen)
+    assert "item_embed->" in rec.describe()
+    # exclude_seen=False ranks the full catalogue
+    ids_all, _ = rec.recommend([0], k=3, exclude_seen=False)
+    assert (ids_all >= 0).all()
+
+
+def test_serving_placement_demotes_user_table_first():
+    from repro.core.tiered_memory import plan_placement
+    from repro.pipeline.plan import serving_profiles
+    profs = serving_profiles(user_nbytes=1000, item_nbytes=1000, row=128)
+    plan = plan_placement(profs, hbm_budget=1000)
+    assert plan.tier("serve/item_embed") == "hbm"
+    assert plan.tier("serve/user_embed") == "host"
+
+
+# ------------------------------------------------------- engine integration
+def test_pipeline_eval_history_in_report(tmp_path):
+    from repro.pipeline import PipelineConfig, build_pipeline
+    from repro.runtime.loop import LoopConfig, run_pipeline
+    data = synth.generate_bipartite(40, 30, 400, seed=0)
+    train, test = synth.train_test_split(data)
+    cfg = PipelineConfig(arch="lightgcn", embed_dim=8, n_layers=1,
+                         base_batch=64, target_batch=128, microbatch=64,
+                         eval_k=10, eval_item_block=16)
+    pipe = build_pipeline(cfg, train, holdout=test)
+    assert pipe.eval_fn is not None
+    report = run_pipeline(
+        LoopConfig(ckpt_dir=str(tmp_path / "ck"), ckpt_every=10,
+                   max_steps=4, async_ckpt=False, eval_every=2), pipe)
+    assert [s for s, _ in report.eval_history] == [2, 4]
+    for _, m in report.eval_history:
+        assert set(m) == {"recall@10", "ndcg@10", "mrr"}
+        assert 0.0 <= m["recall@10"] <= 1.0
+    # direct evaluate() equals the eval_fn output at the same state
+    state = pipe.init_state()
+    assert pipe.evaluate(state) == pipe.eval_fn(state, 0)
+
+
+def test_eval_user_batch_derivation():
+    from repro.pipeline.plan import derive_eval_batch
+    b = derive_eval_batch(2**30, out_dim=64, k=20, item_block=1024)
+    assert b & (b - 1) == 0 and b >= 32          # pow2, floored
+    assert derive_eval_batch(0, 64, 20, 1024) == 32
+    assert derive_eval_batch(2**40, 64, 20, 1024) == 4096  # capped

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings          # noqa: E402
 from hypothesis import strategies as st         # noqa: E402

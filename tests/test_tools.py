@@ -1,0 +1,23 @@
+"""The seed-baseline delta reporter behind ``make test``."""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parents[1] / "tools"))
+from check_test_delta import BASELINE_PATH, parse_summary  # noqa: E402
+
+
+def test_parse_summary_variants():
+    assert parse_summary("127 passed, 1 skipped, 89 deselected in 309s") == \
+        {"passed": 127, "failed": 0, "skipped": 1, "error": 0}
+    assert parse_summary("2 failed, 61 passed, 2 warnings in 26.49s") == \
+        {"passed": 61, "failed": 2, "skipped": 0, "error": 0}
+    assert parse_summary("1 failed, 10 passed, 2 errors in 1.0s") == \
+        {"passed": 10, "failed": 1, "skipped": 0, "error": 2}
+    assert parse_summary("no tests ran in 0.01s") == \
+        {"passed": 0, "failed": 0, "skipped": 0, "error": 0}
+
+
+def test_baseline_records_seed_outcome():
+    baseline = json.loads(BASELINE_PATH.read_text())
+    assert baseline["passed"] == 113 and baseline["skipped"] == 1

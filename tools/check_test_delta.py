@@ -1,0 +1,61 @@
+#!/usr/bin/env python
+"""Run the tier-1 suite and print the pass/fail delta vs the recorded
+seed baseline (tools/seed_baseline.json).
+
+``make test`` routes through this so every run shows at a glance whether
+the suite grew, shrank, or regressed relative to the seed.  Extra args
+are forwarded to pytest (e.g. ``python tools/check_test_delta.py -m
+"not slow"``).  Exit code is pytest's.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import subprocess
+import sys
+
+BASELINE_PATH = pathlib.Path(__file__).with_name("seed_baseline.json")
+FIELDS = ("passed", "failed", "skipped", "error")
+
+
+def parse_summary(output: str) -> dict[str, int]:
+    """Counts from pytest's final summary line (absent fields -> 0)."""
+    counts = dict.fromkeys(FIELDS, 0)
+    for line in reversed(output.strip().splitlines()):
+        found = {word: int(n) for n, word in
+                 re.findall(r"(\d+) (passed|failed|skipped|error)s?", line)}
+        if found:
+            for field in FIELDS:
+                counts[field] = found.get(field, 0)
+            break
+    return counts
+
+
+def main() -> int:
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", *sys.argv[1:]],
+        capture_output=True, text=True)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr)
+
+    baseline = json.loads(BASELINE_PATH.read_text())
+    counts = parse_summary(proc.stdout)
+    print("\n--- delta vs seed baseline "
+          f"({baseline['passed']} passed / {baseline['failed']} failed / "
+          f"{baseline['skipped']} skipped) ---")
+    for field in FIELDS:
+        d = counts[field] - int(baseline.get(field, 0))
+        print(f"  {field:8s} {counts[field]:4d}  ({d:+d})")
+    if counts["failed"] > int(baseline.get("failed", 0)) \
+            or counts["error"] > int(baseline.get("error", 0)):
+        print("  REGRESSION: more failures/errors than the seed baseline")
+    elif counts["passed"] < int(baseline.get("passed", 0)):
+        print("  WARNING: fewer passing tests than the seed baseline")
+    else:
+        print("  OK: no worse than the seed baseline")
+    return proc.returncode
+
+
+if __name__ == "__main__":
+    sys.exit(main())
