@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-fast test-slow bench-smoke bench train-smoke
+.PHONY: test test-fast test-slow bench-smoke bench train-smoke examples check-bytecode
 
 # tier-1 suite (the CI gate) + pass/fail delta vs the seed baseline
 test:
@@ -26,3 +26,14 @@ bench:
 train-smoke:
 	$(PY) -m repro.launch.train --arch lightgcn --steps 20 \
 	    --ckpt-dir /tmp/repro_ckpt_smoke
+
+# both examples end to end through the Experiment API (CI's examples job)
+examples:
+	$(PY) examples/quickstart.py
+	$(PY) examples/serve_recsys.py
+
+# fail if compiled bytecode is tracked (CI's examples job runs this too)
+check-bytecode:
+	@if git ls-files | grep -E '\.pyc$$'; then \
+	    echo "tracked .pyc files found"; exit 1; \
+	else echo "no tracked bytecode"; fi

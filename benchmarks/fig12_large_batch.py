@@ -5,63 +5,64 @@ Paper: batch 1K -> 150K with linear LR scaling + warm-up batch
 too small (1K) hurts.  CPU-scaled: 64 -> 2048 with the same 10x/epoch
 structure; we compare final recall@20 across schedules.
 
-Every variant runs through the **unified pipeline** (repro.pipeline):
-the tiered-memory plan, the LargeBatchSchedule, and real microbatched
-gradient accumulation (microbatch=64, so the 2048-target variants
-accumulate 32 microbatches per update) — this sweep exercises the same
-engine the launcher uses, not a bespoke loop.
+Every variant is one declarative ``ExperimentSpec`` run through the
+unified Experiment API (``repro.api``): the tiered-memory plan, the
+LargeBatchSchedule, and real microbatched gradient accumulation
+(microbatch=64, so the 2048-target variants accumulate 32 microbatches
+per update) — this sweep exercises the same engine the launcher uses,
+not a bespoke loop.
 """
 import numpy as np
 
 from benchmarks.common import emit
+from repro.api import DataCfg, ExperimentSpec, ModelCfg, PlanCfg, build, load_data
 from repro.core import bpr
 from repro.data import synth
-from repro.pipeline import PipelineConfig, build_pipeline
+
+DATA = DataCfg(source="synth", dataset="movielens-10m", edges=8000,
+               test_frac=0.1, seed=0)
 
 
-def _recall(pipe, state, data, train, test):
-    ue, ie = pipe.embeddings(state)
-    test_pos = synth.group_by_user(test.user, test.item, data.n_users)
+def _spec(name: str, **plan_kw) -> ExperimentSpec:
+    plan_kw.setdefault("microbatch", 64)
+    return ExperimentSpec(
+        name=name, model=ModelCfg(arch="lightgcn", embed_dim=32, n_layers=2),
+        data=DATA, plan=PlanCfg(base_batch=64, **plan_kw),
+        optimizer="sgd", base_lr=0.02, l2=1e-4)
+
+
+def _recall(run, train, test):
+    ue, ie = run.embeddings()
+    test_pos = synth.group_by_user(test.user, test.item, train.n_users)
     # dense reference oracle, seen-mask via the O(E) user-CSR
     return bpr.recall_at_k(
         np.asarray(ue), np.asarray(ie),
-        bpr.build_user_csr(train.user, train.item, data.n_users),
+        bpr.build_user_csr(train.user, train.item, train.n_users),
         test_pos, k=20)
 
 
-def _train(cfg: PipelineConfig, data, train, test, epochs: int):
-    pipe = build_pipeline(cfg, train)
-    state = pipe.init_state()
-    steps = pipe.steps_for_epochs(epochs)
-    for s in range(steps):
-        state, _ = pipe.step_fn(state, s)
-    return _recall(pipe, state, data, train, test), pipe
-
-
 def run(epochs: int = 6):
-    data = synth.scaled("movielens-10m", 8000, seed=0)
-    train, test = synth.train_test_split(data, 0.1)
-    base = dict(arch="lightgcn", optimizer="sgd", base_lr=0.02,
-                base_batch=64, microbatch=64, l2=1e-4)
-
+    train, test = load_data(DATA)     # one graph shared across variants
     variants = {
-        "small_batch64": PipelineConfig(**base, target_batch=64,
-                                        warmup_epochs=0),
-        "large_nowarmup": PipelineConfig(**base, target_batch=2048,
-                                         warmup_epochs=0),
-        "large_warmup_paper": PipelineConfig(**base, target_batch=2048,
-                                             warmup_epochs=2),
-        "large_sqrt_lr": PipelineConfig(**base, target_batch=2048,
-                                        warmup_epochs=2, lr_scaling="sqrt"),
+        "small_batch64": _spec("small_batch64", target_batch=64,
+                               warmup_epochs=0),
+        "large_nowarmup": _spec("large_nowarmup", target_batch=2048,
+                                warmup_epochs=0),
+        "large_warmup_paper": _spec("large_warmup_paper", target_batch=2048,
+                                    warmup_epochs=2),
+        "large_sqrt_lr": _spec("large_sqrt_lr", target_batch=2048,
+                               warmup_epochs=2, lr_scaling="sqrt"),
     }
     recalls = {}
-    for name, cfg in variants.items():
-        r, pipe = _train(cfg, data, train, test, epochs)
-        recalls[name] = r
+    for name, spec in variants.items():
+        r = build(spec, train=train)
+        r.fit(steps=r.steps_for_epochs(epochs))
+        recalls[name] = _recall(r, train, test)
         # largest accumulation factor actually used across trained epochs
-        accum = max(pipe.plan.microbatches_for_epoch(e)
+        accum = max(r.pipeline.plan.microbatches_for_epoch(e)
                     for e in range(epochs))
-        emit(f"fig12/recall20_{name}", 0.0, f"{r:.4f} (accum={accum}x)")
+        emit(f"fig12/recall20_{name}", 0.0,
+             f"{recalls[name]:.4f} (accum={accum}x)")
     ok = recalls["large_warmup_paper"] >= recalls["large_nowarmup"] - 0.01
     emit("fig12/warmup_matches_or_beats_nowarmup", 0.0, str(ok))
     return recalls

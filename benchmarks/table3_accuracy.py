@@ -5,66 +5,42 @@ layers (1->3) and embedding width (128->256).  CPU-scaled: amazon-book
 statistics at 8K edges, dims {16, 32}, layers {1, 2, 3}, short training;
 we verify the two monotone trends + the NGCF>=LightGCN ordering.
 
-Evaluation runs through the **streaming top-K path** (``repro.eval``):
-users scored in microbatches against item blocks with the train items
-masked via the O(E) user-CSR — peak eval memory is O(batch × (K +
-block)), never the dense U×I matrix the old ``recall_at_k`` oracle
-allocates.
+Every cell of the table is one declarative ``ExperimentSpec`` run
+through the unified Experiment API (``repro.api``), and evaluation runs
+through the **streaming top-K path** (``repro.eval``): users scored in
+microbatches against item blocks with the train items masked via the
+O(E) user-CSR — peak eval memory is O(batch × (K + block)), never the
+dense U×I matrix the old ``recall_at_k`` oracle allocates.
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from benchmarks.common import emit
-from repro.core import bpr, lightgcn, ngcf
-from repro.core.graph import bipartite_from_numpy
-from repro.data import synth
-from repro.eval import evaluate_embeddings
+from repro.api import (DataCfg, EvalCfg, ExperimentSpec, ModelCfg, PlanCfg,
+                       build, load_data)
+
+DATA = DataCfg(source="synth", dataset="amazon-book", edges=8000,
+               test_frac=0.1, seed=1)
 
 
-def _recall(model, data, g, train, test, embed, layers, epochs=5, lr=0.02,
-            batch=256, seed=0):
-    key = jax.random.PRNGKey(seed)
-    if model == "ngcf":
-        params = ngcf.init_params(key, data.n_users, data.n_items, embed,
-                                  layers)
-        fwd = lambda p: ngcf.forward(p, g)
-    else:
-        params = lightgcn.init_params(key, data.n_users, data.n_items, embed)
-        fwd = lambda p: lightgcn.forward(p, g, n_layers=layers)
-    rng = np.random.default_rng(seed)
-
-    @jax.jit
-    def step(params, u, i, n):
-        loss, grads = jax.value_and_grad(
-            lambda p: bpr.bpr_loss(*fwd(p), u, i, n))(params)
-        return jax.tree.map(lambda p, gr: p - lr * gr, params, grads), loss
-
-    steps = max(len(train.user) // batch, 1) * epochs
-    for _ in range(steps):
-        u, i, n = bpr.sample_bpr_batch(rng, train.user, train.item,
-                                       data.n_items, batch)
-        params, _ = step(params, jnp.asarray(u), jnp.asarray(i),
-                         jnp.asarray(n))
-    ue, ie = fwd(params)
-    indptr, items = bpr.build_user_csr(train.user, train.item, data.n_users)
-    test_pos = synth.group_by_user(test.user, test.item, data.n_users)
-    m = evaluate_embeddings(ue, ie, test_pos, k=20, seen_indptr=indptr,
-                            seen_items=items, user_batch=256, item_block=512)
-    return m["recall@20"]
+def _recall(train, test, model, embed, layers, epochs=5):
+    spec = ExperimentSpec(
+        name=f"table3-{model}-{layers}L-{embed}E",
+        model=ModelCfg(arch=model, embed_dim=embed, n_layers=layers),
+        data=DATA,
+        plan=PlanCfg(base_batch=256, target_batch=256, microbatch=256,
+                     warmup_epochs=0),
+        eval=EvalCfg(k=20, user_batch=256, item_block=512),
+        optimizer="sgd", base_lr=0.02)
+    r = build(spec, train=train, holdout=test)
+    r.fit(steps=r.steps_for_epochs(epochs))
+    return r.evaluate()["recall@20"]
 
 
 def run(epochs: int = 5):
-    data = synth.scaled("amazon-book", 8000, seed=1)
-    train, test = synth.train_test_split(data, 0.1)
-    g = bipartite_from_numpy(train.user, train.item, data.n_users,
-                             data.n_items)
+    train, test = load_data(DATA)     # one graph shared across the table
     table = {}
     for model in ("ngcf", "lightgcn"):
         for embed in (16, 32):
             for layers in (1, 2, 3):
-                r = _recall(model, data, g, train, test, embed, layers,
-                            epochs=epochs)
+                r = _recall(train, test, model, embed, layers, epochs=epochs)
                 table[(model, embed, layers)] = r
                 emit(f"table3/{model}_{layers}L_{embed}E_recall20", 0.0,
                      f"{r:.4f}")

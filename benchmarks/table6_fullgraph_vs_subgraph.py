@@ -7,9 +7,10 @@ slower; 3L even WITH sampling: 32-85x slower).  We run both paths on the
 same CPU-scaled graph (LightGCN) and measure time per batch, plus the
 Fig 14 breakdown (subgraph build share).
 
-The full-graph arm is the **unified pipeline's** accumulated-microbatch
-step (kernel-routed CSR aggregation + planner-derived placement), so
-this sweep measures the engine the launcher actually runs.
+The full-graph arm is one ``ExperimentSpec`` per depth, built through
+the unified Experiment API (``repro.api``) — the accumulated-microbatch
+step (kernel-routed CSR aggregation + planner-derived placement) is the
+engine the launcher actually runs.
 """
 import time
 
@@ -17,30 +18,34 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.data import synth
+from repro.api import DataCfg, ExperimentSpec, ModelCfg, PlanCfg, build
 from repro.dist.subgraph import SubgraphTrainer
-from repro.pipeline import PipelineConfig, build_pipeline
+
+# full graph trains (no held-out split: this sweep measures step time)
+DATA = DataCfg(source="synth", dataset="movielens-10m", edges=12000,
+               test_frac=0.0, seed=0)
 
 
 def run():
-    data = synth.scaled("movielens-10m", 12000, seed=0)
     rng = np.random.default_rng(0)
 
     results = {}
     for layers in (1, 2, 3):
         # full-graph pipeline step (512-sample batch, 256 microbatch ->
         # real 2x gradient accumulation per measured step)
-        pipe = build_pipeline(
-            PipelineConfig(arch="lightgcn", n_layers=layers,
-                           base_batch=512, target_batch=512, microbatch=256,
-                           warmup_epochs=0), data)
-        state = pipe.init_state()
-        state, _ = pipe.step_fn(state, 0)          # warmup/compile
+        r = build(ExperimentSpec(
+            name=f"table6-{layers}L",
+            model=ModelCfg(arch="lightgcn", n_layers=layers),
+            data=DATA,
+            plan=PlanCfg(base_batch=512, target_batch=512, microbatch=256,
+                         warmup_epochs=0)))
+        data = r.train_data
+        r.step()                                   # warmup/compile
         t0 = time.perf_counter()
-        state, _ = pipe.step_fn(state, 1)
+        r.step()
         t_full = time.perf_counter() - t0
-        x_all = jnp.concatenate([state["params"]["user_embed"],
-                                 state["params"]["item_embed"]])
+        x_all = jnp.concatenate([r.params["user_embed"],
+                                 r.params["item_embed"]])
 
         # subgraph step (DistDGL-like, 2 simulated workers)
         src = np.concatenate([data.user, data.item + data.n_users])

@@ -1,81 +1,62 @@
-"""Quickstart: the paper's pipeline end to end in ~a minute on CPU.
+"""Quickstart: the paper's pipeline end to end in ~a minute on CPU,
+driven entirely by the unified Experiment API.
 
-1. synthesize a movielens-statistics bipartite graph,
-2. train LightGCN full-graph with BPR (the paper's §7 recipe: linear LR
-   scaling + warm-up batch),
-3. evaluate recall@20,
-4. show the tiered-memory plan the system would use at paper scale.
+1. one declarative ``ExperimentSpec`` (the ``quickstart`` preset):
+   a movielens-statistics bipartite graph + LightGCN + the paper's §7
+   recipe (warm-up batch, linear LR scaling, microbatch accumulation),
+2. ``fit()`` under the fault-tolerant loop with periodic held-out eval,
+3. streaming recall@20 / NDCG / MRR (never materializes U×I),
+4. batched serving through the planner-placed Recommender facade,
+5. the tiered-memory plan the system would use at paper scale.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import bpr, lightgcn
-from repro.core.graph import bipartite_from_numpy
-from repro.core.large_batch import LargeBatchSchedule
+from repro.api import Experiment, get_preset
 from repro.core.tiered_memory import gnn_recsys_profiles, plan_placement
-from repro.data import synth
-from repro.eval import Recommender, evaluate_embeddings
 
 
 def main():
-    # --- data (paper Table 2 statistics, CPU-scaled)
-    data = synth.scaled("movielens-10m", 8000, seed=0)
-    train, test = synth.train_test_split(data, 0.1)
-    g = bipartite_from_numpy(train.user, train.item, data.n_users,
-                             data.n_items)
-    print(f"graph: {data.n_users} users x {data.n_items} items, "
-          f"{train.n_edges} train edges (density {data.density:.3%})")
+    # --- one declarative spec: data + model + plan + loop + eval
+    exp = Experiment.from_preset("quickstart", {"loop.eval_every": 30})
+    print(exp)
+    print(exp.spec.to_json())
 
-    # --- large-batch schedule (paper §7.1)
-    sched = LargeBatchSchedule(base_lr=0.02, base_batch=64,
-                               target_batch=1024, warmup_epochs=2)
-    params = lightgcn.init_params(jax.random.PRNGKey(0), data.n_users,
-                                  data.n_items, 32)
-    rng = np.random.default_rng(0)
+    run = exp.build()
+    d = run.train_data
+    print(f"graph: {d.n_users} users x {d.n_items} items, "
+          f"{d.n_edges} train edges (density {d.density:.3%})")
+    print(run.describe())
 
-    @jax.jit
-    def step(params, lr, u, i, n):
-        def loss_fn(p):
-            ue, ie = lightgcn.forward(p, g, n_layers=2)
-            return bpr.bpr_loss(ue, ie, u, i, n)
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        return jax.tree.map(lambda p, gr: p - lr * gr, params, grads), loss
-
-    for epoch in range(6):
-        batch = sched.batch_for_epoch(epoch)
-        lr = sched.lr_for_epoch(epoch)
-        for _ in range(max(train.n_edges // batch, 1)):
-            u, i, n = bpr.sample_bpr_batch(rng, train.user, train.item,
-                                           data.n_items, batch)
-            params, loss = step(params, lr, jnp.asarray(u), jnp.asarray(i),
-                                jnp.asarray(n))
-        print(f"epoch {epoch}: batch={batch} lr={lr:.4f} "
-              f"loss={float(loss):.4f}")
+    # --- train under the fault-tolerant loop (§7.1 schedule inside)
+    report = run.fit()
+    print(f"trained {report.steps_run} steps, "
+          f"loss {report.losses[0]:.4f} -> {report.losses[-1]:.4f}")
+    for step, m in report.eval_history:
+        print(f"  eval@{step}: " +
+              " ".join(f"{k}={v:.4f}" for k, v in sorted(m.items())))
 
     # --- held-out metrics (paper's recall@20 + NDCG/MRR) through the
     # streaming top-K path: item blocks + CSR seen-mask, never U×I
-    ue, ie = lightgcn.forward(params, g, n_layers=2)
-    indptr, items = bpr.build_user_csr(train.user, train.item, data.n_users)
-    test_pos = synth.group_by_user(test.user, test.item, data.n_users)
-    m = evaluate_embeddings(ue, ie, test_pos, k=20, seen_indptr=indptr,
-                            seen_items=items)
+    m = run.evaluate()
     print(" ".join(f"{k}={v:.4f}" for k, v in sorted(m.items())))
 
     # --- serving facade: planner-placed embedding snapshot, batched top-K
-    rec = Recommender(ue, ie, seen_indptr=indptr, seen_items=items, k=5)
+    rec = run.recommender(k=5)
     print(rec.describe())
     ids, _scores = rec.recommend([0, 1, 2])
     for u, row in zip((0, 1, 2), ids):
         print(f"  user {u}: top-5 unseen items {row.tolist()}")
 
     # --- the paper's technique at production scale: where do the tensors
-    # live when the model is m-x25-sized and HBM is 16 GiB/chip?
-    profiles = gnn_recsys_profiles(349_000, 53_000, 250_000_000, 128, 3)
-    plan = plan_placement(profiles, hbm_budget=64 * 2**30)  # 4 chips' worth
-    print("\ntiered-memory plan (m-x25 scale, 64 GiB fast-tier budget):")
+    # live when the model is m-x25-sized (the lightgcn-full preset) and
+    # the fast tier is 4 chips' worth of HBM?
+    full = get_preset("lightgcn-full")
+    profiles = gnn_recsys_profiles(full.data.n_users, full.data.n_items,
+                                   full.data.edges, full.model.embed_dim,
+                                   full.model.n_layers)
+    plan = plan_placement(profiles, hbm_budget=64 * 2**30)
+    print(f"\ntiered-memory plan ({full.name} scale, "
+          "64 GiB fast-tier budget):")
     for p in profiles:
         print(f"  {p.name:16s} {p.nbytes/2**30:7.2f} GiB -> "
               f"{plan.tier(p.name)}")

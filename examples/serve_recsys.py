@@ -1,62 +1,58 @@
-"""Serving example: batched CTR scoring + top-k retrieval with DLRM.
+"""Serving example: train once through the Experiment API, then serve
+batched top-K recommendations through the planner-placed facade.
 
-Covers the three serving shapes of the assignment (p99 online batches,
-bulk offline scoring, 1-vs-1M candidate retrieval) at CPU scale.
+Covers the three serving shapes of the assignment at CPU scale:
+  * p99-style small online batches (16 users/query),
+  * bulk offline scoring (512 users/query),
+  * 1-vs-whole-catalogue retrieval for a single user.
+
+The ``Recommender`` snapshot is placed by the same TieredMemoryPlanner
+that places training tensors (item table streams fully per query batch,
+user table is only row-gathered), and every query runs the streaming
+top-K scorer — peak memory O(batch × (K + block)), never U×I.
 
 Run:  PYTHONPATH=src python examples/serve_recsys.py
 """
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
-from repro.models import recsys_models as rm
+from repro.api import Experiment
 
 
 def main():
-    cfg = configs.get("dlrm_rm2").SMOKE
-    params = rm.dlrm_init(cfg, jax.random.PRNGKey(0))
+    # --- one declarative spec; a short fit gives us trained embeddings
+    exp = Experiment.from_preset("quickstart", {"loop.steps": 20})
+    run = exp.build()
+    run.fit()
+    print(run.describe())
+
+    rec = run.recommender(k=10)
+    print(rec.describe())
     rng = np.random.default_rng(0)
 
-    score = jax.jit(lambda d, i: rm.dlrm_forward(cfg, params, d, i))
-    retrieve = jax.jit(lambda d, i, c: rm.dlrm_retrieve(cfg, params, d, i, c))
-
-    # online p99-style small batches
+    # --- online p99-style small batches vs bulk offline scoring
     for batch, tag in [(16, "serve_p99"), (512, "serve_bulk")]:
-        dense = jnp.asarray(rng.standard_normal((batch, cfg.n_dense))
-                            .astype(np.float32))
-        ids = jnp.asarray(rng.integers(0, cfg.vocab, (batch, cfg.n_sparse))
-                          .astype(np.int32))
-        out = jax.block_until_ready(score(dense, ids))
+        users = rng.integers(0, rec.n_users, batch).astype(np.int32)
+        rec.recommend(users)                       # warmup/compile
         t0 = time.perf_counter()
-        out = jax.block_until_ready(score(dense, ids))
+        ids, _scores = rec.recommend(users)
         dt = (time.perf_counter() - t0) * 1e6
-        print(f"{tag}: batch={batch} -> scores {out.shape}, "
+        print(f"{tag}: batch={batch} -> top-{rec.k} ids {ids.shape}, "
               f"{dt:.0f} us/batch ({dt/batch:.1f} us/req)")
 
-    # retrieval: one user, many candidates, batched dot (not a loop)
-    n_cand = 4096
-    dense = jnp.asarray(rng.standard_normal((1, cfg.n_dense)).astype(np.float32))
-    ids = jnp.asarray(rng.integers(0, cfg.vocab, (1, cfg.n_sparse))
-                      .astype(np.int32))
-    cand = jnp.asarray(rng.integers(0, cfg.vocab, n_cand).astype(np.int32))
-    scores = jax.block_until_ready(retrieve(dense, ids, cand))
-    topk = jax.lax.top_k(scores, 5)
-    print(f"retrieval: {n_cand} candidates -> top5 ids "
-          f"{np.asarray(cand)[np.asarray(topk[1])]}")
+    # --- retrieval: one user against the whole catalogue (seen excluded)
+    rec.recommend([0])                             # warmup/compile
+    t0 = time.perf_counter()
+    ids, scores = rec.recommend([0])
+    dt = (time.perf_counter() - t0) * 1e6
+    print(f"retrieval: user 0 vs {rec.n_items}-item catalogue in "
+          f"{dt:.0f} us -> top-{rec.k} unseen items {ids[0].tolist()}")
 
-    # BERT4Rec next-item retrieval (sequential recsys)
-    bcfg = configs.get("bert4rec").SMOKE
-    bparams = rm.bert4rec_init(bcfg, jax.random.PRNGKey(1))
-    seq = jnp.asarray(rng.integers(0, bcfg.n_items, (2, bcfg.seq_len))
-                      .astype(np.int32))
-    smask = jnp.ones_like(seq, bool)
-    cand = jnp.arange(bcfg.n_items, dtype=jnp.int32)
-    s = rm.bert4rec_retrieve(bcfg, bparams, seq, smask, cand)
-    print(f"bert4rec: catalogue scores {s.shape}, "
-          f"top item per user {np.asarray(jnp.argmax(s, -1))}")
+    # --- the same queries through the Run convenience wrapper
+    ids, _ = run.recommend([0, 1, 2], k=5)
+    for u, row in zip((0, 1, 2), ids):
+        print(f"  user {u}: top-5 unseen items {row.tolist()}")
 
 
 if __name__ == "__main__":

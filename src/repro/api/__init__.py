@@ -1,0 +1,27 @@
+"""repro.api — the unified Experiment API.
+
+One declarative ``ExperimentSpec`` (model / data / plan / loop / eval)
+drives the whole stack: ``build(spec)`` returns a ``Run`` exposing
+``fit()`` (fault-tolerant loop), ``evaluate()`` (streaming top-K),
+``recommend()`` (planner-placed serving facade), and ``resume()``.
+
+  Experiment  — preset / dict / JSON-file constructors + overrides;
+  ExperimentSpec, ModelCfg, DataCfg, PlanCfg, LoopCfg, EvalCfg — the
+      typed, serializable sections;
+  build / Run — spec -> live handle;
+  get_preset / register_preset / preset_names — the preset registry
+      (absorbs repro.configs FULL/SMOKE for the GNNRecSys family);
+  load_data / register_data_source — data sources behind one protocol.
+"""
+from repro.api.data import (DATA_SOURCES, load_data, register_data_source)
+from repro.api.experiment import Experiment
+from repro.api.presets import get_preset, preset_names, register_preset
+from repro.api.run import Run, build
+from repro.api.spec import (DataCfg, EvalCfg, ExperimentSpec, LoopCfg,
+                            ModelCfg, PlanCfg)
+
+__all__ = [
+    "Experiment", "ExperimentSpec", "ModelCfg", "DataCfg", "PlanCfg",
+    "LoopCfg", "EvalCfg", "Run", "build", "get_preset", "register_preset",
+    "preset_names", "load_data", "register_data_source", "DATA_SOURCES",
+]

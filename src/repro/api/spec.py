@@ -1,0 +1,185 @@
+"""ExperimentSpec — the one declarative description of a run.
+
+The paper's thesis (§5-§7) is that batch size, tensor placement, and
+model depth must be co-tuned; before this module those knobs lived on
+three disconnected surfaces (``repro.configs`` registry entries,
+``PipelineConfig``/``LoopConfig`` dataclasses, ad-hoc argparse flags).
+``ExperimentSpec`` is the single source of truth: five typed sections
+(model / data / plan / loop / eval) plus the training hyperparameters,
+with an exact ``to_dict``/``from_dict``/JSON round-trip and dotted-path
+overrides so a CLI flag, a preset, and a spec file all converge on the
+same object.  ``repro.api.build(spec)`` turns it into a ``Run``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Mapping
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """Which architecture, how wide, how deep (paper Table 3 axes)."""
+    arch: str = "lightgcn"           # repro.pipeline.registry key
+    embed_dim: int = 32
+    n_layers: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class DataCfg:
+    """Where interactions come from — one protocol over every source
+    (``repro.api.data.DATA_SOURCES``): 'synth' scales a named paper
+    dataset's statistics, 'bipartite' generates explicit sizes,
+    'kronecker' expands a scaled base graph (paper's m-x25 method)."""
+    source: str = "synth"            # registered data-source name
+    dataset: str = "movielens-10m"   # stats name (synth / kronecker)
+    edges: int = 4000                # target edge count (pre-expansion)
+    n_users: int | None = None       # explicit sizes ('bipartite')
+    n_items: int | None = None
+    expand_factor: int = 1           # kronecker edge multiplier
+    test_frac: float = 0.1           # held-out split; 0 -> no holdout
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCfg:
+    """Placement + batching knobs consumed by ``pipeline.plan``."""
+    hbm_budget: int | None = None    # planner budget override (bytes)
+    target_batch: int = 2048         # §7.1 large-batch target
+    microbatch: int | None = None    # None -> derived from HBM headroom
+    base_batch: int = 256            # LR-scaling reference batch
+    warmup_epochs: int = 2           # warm-up batch = target/10 epochs
+    lr_scaling: str = "linear"       # 'linear' | 'sqrt'
+    impl: str | None = None          # kernel dispatch override
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopCfg:
+    """Fault-tolerant-loop knobs consumed by ``runtime.loop``."""
+    steps: int = 100
+    ckpt_dir: str | None = None      # None -> in-memory run (no resume)
+    ckpt_every: int | None = None    # None -> max(steps // 2, 1)
+    eval_every: int | None = None    # held-out eval cadence; None = off
+    step_deadline_s: float | None = None
+    max_strays: int = 3
+    async_ckpt: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalCfg:
+    """Streaming top-K evaluation/serving shape (``repro.eval``)."""
+    k: int = 20
+    user_batch: int | None = None    # None -> derived from HBM headroom
+    item_block: int = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """The whole experiment, declaratively."""
+    name: str = "experiment"
+    model: ModelCfg = dataclasses.field(default_factory=ModelCfg)
+    data: DataCfg = dataclasses.field(default_factory=DataCfg)
+    plan: PlanCfg = dataclasses.field(default_factory=PlanCfg)
+    loop: LoopCfg = dataclasses.field(default_factory=LoopCfg)
+    eval: EvalCfg = dataclasses.field(default_factory=EvalCfg)
+    optimizer: str = "adam"          # 'adam' | 'sgd'
+    base_lr: float = 1e-3
+    l2: float = 1e-4
+    seed: int = 0
+
+    # ------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentSpec":
+        return _spec_from_dict(cls, d, where="spec")
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(s))
+
+    @classmethod
+    def from_file(cls, path: str) -> "ExperimentSpec":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    # ------------------------------------------------------- overrides
+    def override(self, overrides: Mapping[str, Any] | None = None,
+                 **kw: Any) -> "ExperimentSpec":
+        """New spec with dotted-path fields replaced:
+        ``spec.override({"model.embed_dim": 64, "plan.microbatch": 128})``.
+        Top-level fields work too (``optimizer="sgd"`` or
+        ``{"optimizer": "sgd"}``).  Unknown paths raise KeyError."""
+        merged = {**(overrides or {}), **kw}
+        spec = self
+        for path, value in merged.items():
+            spec = _replace_path(spec, path.split("."), value)
+        return spec
+
+    # ------------------------------------------------------- pipeline view
+    def to_pipeline_config(self):
+        """The engine-facing projection of this spec (the legacy
+        ``PipelineConfig`` the pipeline layer still consumes)."""
+        from repro.pipeline import PipelineConfig
+        return PipelineConfig(
+            arch=self.model.arch, embed_dim=self.model.embed_dim,
+            n_layers=self.model.n_layers, optimizer=self.optimizer,
+            base_lr=self.base_lr, base_batch=self.plan.base_batch,
+            target_batch=self.plan.target_batch,
+            microbatch=self.plan.microbatch,
+            warmup_epochs=self.plan.warmup_epochs,
+            lr_scaling=self.plan.lr_scaling, l2=self.l2,
+            hbm_budget=self.plan.hbm_budget, impl=self.plan.impl,
+            seed=self.seed, eval_k=self.eval.k,
+            eval_user_batch=self.eval.user_batch,
+            eval_item_block=self.eval.item_block)
+
+
+_SECTIONS = {"model": ModelCfg, "data": DataCfg, "plan": PlanCfg,
+             "loop": LoopCfg, "eval": EvalCfg}
+
+
+def _fields(cls) -> dict:
+    return {f.name: f for f in dataclasses.fields(cls)}
+
+
+def _spec_from_dict(cls, d: Mapping[str, Any], where: str) -> ExperimentSpec:
+    known = _fields(cls)
+    unknown = set(d) - set(known)
+    if unknown:
+        raise ValueError(f"unknown {where} keys {sorted(unknown)}; "
+                         f"known: {sorted(known)}")
+    kw: dict[str, Any] = {}
+    for name, value in d.items():
+        section = _SECTIONS.get(name)
+        if section is not None:
+            if not isinstance(value, Mapping):
+                raise ValueError(f"{where}.{name} must be a mapping")
+            sub_known = _fields(section)
+            sub_unknown = set(value) - set(sub_known)
+            if sub_unknown:
+                raise ValueError(
+                    f"unknown {where}.{name} keys {sorted(sub_unknown)}; "
+                    f"known: {sorted(sub_known)}")
+            kw[name] = section(**value)
+        else:
+            kw[name] = value
+    return cls(**kw)
+
+
+def _replace_path(obj, path: list[str], value):
+    head = path[0]
+    if not any(f.name == head for f in dataclasses.fields(obj)):
+        raise KeyError(f"unknown spec field {'.'.join(path)!r}")
+    if len(path) == 1:
+        return dataclasses.replace(obj, **{head: value})
+    return dataclasses.replace(
+        obj, **{head: _replace_path(getattr(obj, head), path[1:], value)})

@@ -1,6 +1,7 @@
 """Bayesian Personalized Ranking loss, negative sampling, recall@K."""
 from __future__ import annotations
 
+import warnings
 from functools import partial
 
 import jax
@@ -62,6 +63,12 @@ def recall_at_k(user_e, item_e, train, test_pos: list[np.ndarray],
         if train.ndim != 2 or train.dtype != bool:
             raise TypeError("dense train mask must be a 2-D boolean array; "
                             "pass build_user_csr(...) otherwise")
+        warnings.warn(
+            "passing a dense [U, I] boolean train mask to recall_at_k is "
+            "deprecated (it materializes the U×I matrix twice); pass the "
+            "(indptr, items) user-CSR from build_user_csr, or use the "
+            "streaming evaluation in repro.eval (evaluate_embeddings)",
+            DeprecationWarning, stacklevel=2)
         scores[train] = -np.inf            # legacy dense-mask shim
     else:
         indptr, items = train

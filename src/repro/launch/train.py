@@ -1,21 +1,26 @@
 """End-to-end training launcher.
 
-CPU-sized by default (smoke config, synthetic data); the same entry point
+CPU-sized by default (smoke-scale synthetic data); the same entry point
 drives the production mesh on real hardware via --mesh.
+
+GNNRecSys archs (lightgcn / ngcf / gcn) run through the unified
+Experiment API (``repro.api``): every flag is a declarative-spec
+override, so the CLI, a preset, and a JSON spec file all build the same
+``ExperimentSpec`` — tiered-memory placement, the §7.1 large-batch
+schedule, microbatched gradient accumulation, and streaming held-out
+eval all ride along.
 
   python -m repro.launch.train --arch lightgcn --steps 100
   python -m repro.launch.train --arch ngcf --target-batch 4096 --microbatch 512
-  python -m repro.launch.train --arch gcn-cora --steps 50
-  python -m repro.launch.train --arch deepfm --steps 50
-
-GNNRecSys archs (lightgcn / ngcf / gcn) run through the unified
-pipeline: tiered-memory placement over the run's tensor set, the §7.1
-large-batch schedule, and microbatched gradient accumulation so the
-target batch can exceed the per-step memory budget.
+  python -m repro.launch.train --preset lightgcn-smoke
+  python -m repro.launch.train --arch lightgcn --dataset gowalla --edges 8000
+  python -m repro.launch.train --spec my_experiment.json --set plan.microbatch=128
+  python -m repro.launch.train --arch gcn-cora --steps 50      # legacy archs
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -23,49 +28,129 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as config_registry
-from repro.checkpoint import latest_step, restore_checkpoint
-from repro.data import synth
+from repro.api import (DataCfg, Experiment, ExperimentSpec, LoopCfg,
+                       ModelCfg, PlanCfg, get_preset)
 from repro.optim import adam
-from repro.pipeline import PipelineConfig, build_pipeline
-from repro.runtime.loop import LoopConfig, run_pipeline, run_training
+from repro.runtime.loop import LoopConfig, run_training
 
 PIPELINE_ARCHS = ("lightgcn", "ngcf", "gcn")
 
+DEFAULT_CKPT_ROOT = "/tmp/repro_ckpt"
 
-def train_gnnrecsys(arch: str, steps: int, ckpt_dir: str,
-                    target_batch: int = 2048, microbatch: int | None = 512,
-                    base_batch: int = 512, edges: int = 4000,
-                    embed_dim: int = 32, layers: int = 2,
-                    hbm_budget: int | None = None,
-                    eval_every: int | None = None, eval_k: int = 20):
-    """Full-graph BPR training through the unified pipeline on a synthetic
-    graph matching the paper's dataset statistics.  The held-out split is
-    evaluated through the streaming top-K path (``repro.eval``) every
-    ``eval_every`` steps and once at the end."""
-    data = synth.scaled("movielens-10m", edges, seed=0)
-    train, test = synth.train_test_split(data)
-    cfg = PipelineConfig(arch=arch, embed_dim=embed_dim, n_layers=layers,
-                         base_batch=base_batch, target_batch=target_batch,
-                         microbatch=microbatch, hbm_budget=hbm_budget,
-                         eval_k=eval_k)
-    pipe = build_pipeline(cfg, train, holdout=test)
-    print(pipe.plan.describe())
-    loop_cfg = LoopConfig(ckpt_dir=ckpt_dir, ckpt_every=max(steps // 2, 1),
-                          max_steps=steps, async_ckpt=False,
-                          eval_every=eval_every)
+
+def default_spec() -> ExperimentSpec:
+    """The launcher's base spec — the values the flags override."""
+    return ExperimentSpec(
+        name="train",
+        model=ModelCfg(arch="lightgcn", embed_dim=32, n_layers=2),
+        data=DataCfg(source="synth", dataset="movielens-10m", edges=4000),
+        plan=PlanCfg(base_batch=512, target_batch=2048, microbatch=512),
+        loop=LoopCfg(steps=100),
+    )
+
+
+def build_arg_parser() -> argparse.ArgumentParser:
+    """Flags default to None so only explicitly-passed ones override the
+    base spec (preset / spec file / ``default_spec``)."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", help="model architecture "
+                    f"(pipeline: {', '.join(PIPELINE_ARCHS)}; plus the "
+                    "legacy CPU trainers)")
+    ap.add_argument("--preset", help="start from a named spec "
+                    "(repro.api.preset_names())")
+    ap.add_argument("--spec", help="start from a JSON ExperimentSpec file")
+    ap.add_argument("--set", action="append", default=[], metavar="PATH=V",
+                    help="dotted spec override, e.g. plan.hbm_budget=2048 "
+                         "(repeatable; values parsed as JSON)")
+    ap.add_argument("--steps", type=int)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--dataset", help="paper dataset statistics to "
+                    "synthesize (repro.data.synth.DATASET_STATS)")
+    ap.add_argument("--edges", type=int)
+    ap.add_argument("--target-batch", type=int,
+                    help="large-batch target (accumulated microbatches)")
+    ap.add_argument("--microbatch", type=int,
+                    help="microbatch size; 0 = derive from HBM headroom")
+    ap.add_argument("--embed-dim", type=int)
+    ap.add_argument("--layers", type=int)
+    ap.add_argument("--eval-every", type=int,
+                    help="held-out streaming-eval cadence in steps; "
+                         "0 = final eval only")
+    ap.add_argument("--eval-k", type=int)
+    return ap
+
+
+def _parse_set(entry: str) -> tuple[str, object]:
+    path, sep, raw = entry.partition("=")
+    if not sep:
+        raise SystemExit(f"--set expects PATH=VALUE, got {entry!r}")
+    try:
+        value = json.loads(raw)
+    except json.JSONDecodeError:
+        value = raw                       # bare strings pass through
+    return path.strip(), value
+
+
+def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
+    """argparse namespace -> ExperimentSpec: base (spec file > preset >
+    defaults), then flag overrides, then --set dotted overrides."""
+    if args.spec:
+        spec = ExperimentSpec.from_file(args.spec)
+    elif args.preset:
+        spec = get_preset(args.preset)
+    else:
+        spec = default_spec()
+    ov: dict[str, object] = {}
+    if args.arch is not None:
+        ov["model.arch"] = args.arch
+    if args.embed_dim is not None:
+        ov["model.embed_dim"] = args.embed_dim
+    if args.layers is not None:
+        ov["model.n_layers"] = args.layers
+    if args.dataset is not None:
+        ov["data.dataset"] = args.dataset
+    if args.edges is not None:
+        ov["data.edges"] = args.edges
+    if args.target_batch is not None:
+        ov["plan.target_batch"] = args.target_batch
+    if args.microbatch is not None:
+        ov["plan.microbatch"] = args.microbatch or None
+    if args.steps is not None:
+        ov["loop.steps"] = args.steps
+    if args.eval_every is not None:
+        ov["loop.eval_every"] = args.eval_every or None
+    if args.eval_k is not None:
+        ov["eval.k"] = args.eval_k
+    spec = spec.override(ov)
+    spec = spec.override(dict(_parse_set(s) for s in args.set))
+    # ckpt-dir default last, so it names the arch the run actually uses
+    # (a --set model.arch=... override included)
+    if spec.loop.ckpt_dir is None:
+        ckpt_root = args.ckpt_dir if args.ckpt_dir is not None \
+            else DEFAULT_CKPT_ROOT
+        spec = spec.override({"loop.ckpt_dir": f"{ckpt_root}/{spec.model.arch}"})
+    return spec
+
+
+def run_experiment(spec: ExperimentSpec):
+    """One spec, end to end: build -> fit (fault-tolerant loop, resumes
+    from the spec's checkpoint dir) -> final held-out streaming eval."""
+    run = Experiment(spec).build()
+    print(run.describe())
     t0 = time.perf_counter()
-    report = run_pipeline(loop_cfg, pipe)
+    report = run.fit()
     dt = time.perf_counter() - t0
-    print(f"[{arch}] {report.steps_run} steps in {dt:.1f}s "
+    pipe = run.pipeline
+    print(f"[{spec.model.arch}] {report.steps_run} steps in {dt:.1f}s "
           f"loss {_loss_span(report)} "
           f"(microbatch={pipe.plan.microbatch}, "
           f"accum={pipe.plan.microbatches_for_epoch(pipe.loader.state.epoch)}x, "
           f"resumed_from={report.resumed_from})")
     for step, m in report.eval_history:
         print(f"  eval@{step}: {_fmt_metrics(m)}")
-    state, _ = restore_checkpoint(ckpt_dir, pipe.init_state())
-    final = pipe.evaluate(pipe.apply_plan(state))
-    print(f"[{arch}] final held-out: {_fmt_metrics(final)}")
+    if run.holdout is not None:
+        print(f"[{spec.model.arch}] final held-out: "
+              f"{_fmt_metrics(run.evaluate())}")
     return report
 
 
@@ -155,36 +240,20 @@ def train_recsys(arch: str, steps: int, ckpt_dir: str, batch: int = 256):
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
-    ap.add_argument("--target-batch", type=int, default=2048,
-                    help="large-batch target (accumulated microbatches)")
-    ap.add_argument("--microbatch", type=int, default=512,
-                    help="microbatch size; 0 = derive from HBM headroom")
-    ap.add_argument("--edges", type=int, default=4000)
-    ap.add_argument("--embed-dim", type=int, default=32)
-    ap.add_argument("--layers", type=int, default=2)
-    ap.add_argument("--eval-every", type=int, default=0,
-                    help="held-out streaming-eval cadence in steps; "
-                         "0 = final eval only")
-    ap.add_argument("--eval-k", type=int, default=20)
-    args = ap.parse_args()
-    if args.arch in PIPELINE_ARCHS:
-        train_gnnrecsys(args.arch, args.steps, f"{args.ckpt_dir}/{args.arch}",
-                        target_batch=args.target_batch,
-                        microbatch=args.microbatch or None,
-                        edges=args.edges, embed_dim=args.embed_dim,
-                        layers=args.layers,
-                        eval_every=args.eval_every or None,
-                        eval_k=args.eval_k)
+    args = build_arg_parser().parse_args()
+    if args.preset or args.spec or args.arch in PIPELINE_ARCHS:
+        run_experiment(spec_from_args(args))
         return
+    if args.arch is None:
+        raise SystemExit("need --arch, --preset, or --spec")
     arch = config_registry.canon(args.arch)
+    steps = args.steps if args.steps is not None else 100
+    ckpt_root = args.ckpt_dir if args.ckpt_dir is not None \
+        else DEFAULT_CKPT_ROOT
     if arch == "gcn_cora":
-        train_gcn(args.steps, f"{args.ckpt_dir}/{arch}")
+        train_gcn(steps, f"{ckpt_root}/{arch}")
     elif arch in ("deepfm", "xdeepfm", "dlrm_rm2"):
-        train_recsys(arch, args.steps, f"{args.ckpt_dir}/{arch}")
+        train_recsys(arch, steps, f"{ckpt_root}/{arch}")
     else:
         raise SystemExit(
             f"CPU trainer for {arch!r} not wired; pipeline archs: "

@@ -24,7 +24,7 @@ from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 
 @dataclasses.dataclass
 class LoopConfig:
-    ckpt_dir: str
+    ckpt_dir: str | None = None     # None -> in-memory run (no resume)
     ckpt_every: int = 50
     max_steps: int = 200
     step_deadline_s: float | None = None
@@ -43,24 +43,31 @@ class LoopReport:
     # (step, metrics dict) per eval_every firing — the train-time metric
     # history (paper Table 3's recall@20 tracked during training)
     eval_history: list = dataclasses.field(default_factory=list)
+    # the state after the last step — callers (repro.api.Run) continue
+    # from here without a checkpoint round-trip
+    final_state: Any = None
 
 
 def run_training(cfg: LoopConfig, init_state: Any,
                  step_fn: Callable[[Any, int], tuple[Any, float]],
                  on_relayout: Callable[[Any], Any] | None = None,
                  on_restore: Callable[[Any], Any] | None = None,
-                 eval_fn: Callable[[Any, int], dict] | None = None
-                 ) -> LoopReport:
+                 eval_fn: Callable[[Any, int], dict] | None = None,
+                 start_step: int = 0) -> LoopReport:
     """step_fn(state, step) -> (state, loss).  Resumes if a checkpoint
     exists (``on_restore`` post-processes the restored state — e.g.
     re-applying memory-tier placements that raw checkpoint leaves lose);
     checkpoints every ``ckpt_every``; final state saved at end.
     ``eval_fn(state, step) -> metrics`` fires every ``cfg.eval_every``
-    steps and its results accumulate in ``LoopReport.eval_history``."""
-    start = 0
+    steps and its results accumulate in ``LoopReport.eval_history``.
+    ``cfg.ckpt_dir=None`` runs in memory: no restore, no saves.
+    ``start_step`` positions the loop when ``init_state`` has already
+    trained that far (repro.api.Run continuing in memory); a restored
+    checkpoint overrides it."""
+    start = start_step
     state = init_state
     resumed = None
-    if latest_step(cfg.ckpt_dir) is not None:
+    if cfg.ckpt_dir is not None and latest_step(cfg.ckpt_dir) is not None:
         state, start = restore_checkpoint(cfg.ckpt_dir, init_state)
         resumed = start
         if on_restore is not None:
@@ -87,16 +94,17 @@ def run_training(cfg: LoopConfig, init_state: Any,
                     state = on_relayout(state)
         else:
             strays = 0
-        if (step + 1) % cfg.ckpt_every == 0:
+        if cfg.ckpt_dir is not None and (step + 1) % cfg.ckpt_every == 0:
             if pending is not None:
                 pending.join()
             pending = save_checkpoint(cfg.ckpt_dir, step + 1, state,
                                       async_=cfg.async_ckpt)
     if pending is not None:
         pending.join()
-    save_checkpoint(cfg.ckpt_dir, cfg.max_steps, state)
+    if cfg.ckpt_dir is not None:
+        save_checkpoint(cfg.ckpt_dir, cfg.max_steps, state)
     return LoopReport(cfg.max_steps - start, resumed, strays, relayouts,
-                      losses, evals)
+                      losses, evals, final_state=state)
 
 
 def run_pipeline(cfg: LoopConfig, pipeline) -> LoopReport:
