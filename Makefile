@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-fast test-slow bench-smoke bench train-smoke examples check-bytecode
+.PHONY: test test-fast test-slow test-multidevice bench-smoke bench train-smoke examples check-bytecode
 
 # tier-1 suite (the CI gate) + pass/fail delta vs the seed baseline
 test:
@@ -14,6 +14,13 @@ test-fast:
 # slow tier: property-based + kernel-parity sweeps (CI's second job)
 test-slow:
 	$(PY) -m pytest -q -m slow
+
+# sharded execution under a forced multi-device host platform: the ring/
+# mesh parity tests plus the whole pipeline suite with 4 CPU devices
+# visible (CI's multidevice job)
+test-multidevice:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PY) -m pytest -q -m "not slow" tests/test_distributed.py tests/test_pipeline.py
 
 # fast benchmark subset: planner model + placement + memory model
 bench-smoke:

@@ -3,42 +3,51 @@
 Fig 10: AppDirect (explicit placement) vs Memory Mode (HW cache) and
 Optane+DRAM vs Optane-alone -> our planner vs naive policies.
 Fig 11: blocked vs interleaved NUMA placement -> edge-blocked vs
-round-robin edge sharding cost, computed from the ring_spmm bucket
-structure (blocked placement keeps SDDMM writes local; paper picks
-blocked end-to-end).
+round-robin edge sharding cost over a ``ShardPlan`` node partition
+(blocked placement keeps SDDMM writes local; paper picks blocked
+end-to-end).
+
+The planner arm's shapes come from the paper-scale ``lightgcn-full``
+preset of the Experiment API (the m-x25 configuration the config
+registry declares), not hand-typed sizes — every benchmark builds its
+configuration through ``repro.api``.
 """
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core.tiered_memory import (HBM_CAPACITY, gnn_recsys_profiles,
-                                      plan_placement)
-from repro.dist.ring_spmm import bucket_edges
+from repro.api import get_preset
+from repro.core.tiered_memory import (_slow_tier_penalty,
+                                      gnn_recsys_profiles, plan_placement)
+from repro.pipeline.shard import ShardPlan
 
 
 def run():
     # planner (AppDirect analog) vs "everything slow tier" (Optane-alone)
-    # vs hardware-managed proxy (random placement)
-    profiles = gnn_recsys_profiles(300_000, 400_000, 30_000_000, 128, 3)
+    # vs hardware-managed proxy (random placement), at the paper-scale
+    # shapes the lightgcn-full preset declares
+    spec = get_preset("lightgcn-full")
+    profiles = gnn_recsys_profiles(
+        spec.data.n_users, spec.data.n_items, spec.data.edges,
+        spec.model.embed_dim, spec.model.n_layers)
     total = sum(p.nbytes for p in profiles)
     budget = int(total * 0.3)
     plan = plan_placement(profiles, hbm_budget=budget)
-    slow_all = sum(__import__("repro.core.tiered_memory",
-                              fromlist=["x"])._slow_tier_penalty(p)
-                   for p in profiles)
+    slow_all = sum(_slow_tier_penalty(p) for p in profiles)
     emit("fig10/planner_step_penalty_s", 0.0,
-         f"{plan.est_step_penalty_s:.4f}")
+         f"{plan.est_step_penalty_s:.4f} ({spec.name})")
     emit("fig10/slowtier_only_step_penalty_s", 0.0, f"{slow_all:.4f}")
     emit("fig10/planner_speedup_vs_slow_only", 0.0,
          f"{slow_all/max(plan.est_step_penalty_s, 1e-9):.2f}x "
          f"(paper: Optane+DRAM 1.3-1.5x over Optane-alone)")
 
     # blocked vs interleaved edge placement: fraction of edge traffic
-    # that stays device-local
+    # that stays device-local, over the shard layer's block partition
     rng = np.random.default_rng(0)
     n, e, p = 4096, 200_000, 16
     src = rng.integers(0, n, e).astype(np.int64)
     dst = rng.integers(0, n, e).astype(np.int64)
-    per = n // p
+    part = ShardPlan(shape=(p,), axes=("data",)).partition(n)
+    per = part.n_local
     local_blocked = float(np.mean((src // per) == (dst // per)))
     local_interleaved = float(np.mean((src % p) == (dst % p)))
     emit("fig11/blocked_local_fraction", 0.0, f"{local_blocked:.4f}")

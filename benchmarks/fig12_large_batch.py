@@ -41,7 +41,11 @@ def _recall(run, train, test):
         test_pos, k=20)
 
 
-def run(epochs: int = 6):
+def run(epochs: int = 6, mesh: str | None = None):
+    """``mesh`` ('4', '2x2', ...) adds a mesh-sharded replica of the
+    paper-recipe variant: same global batch (per-shard microbatch =
+    64/P), ring-dispatched SpMM, dp-sharded accumulation — its recall
+    should match the unsharded paper variant to fp32 noise."""
     train, test = load_data(DATA)     # one graph shared across variants
     variants = {
         "small_batch64": _spec("small_batch64", target_batch=64,
@@ -53,6 +57,14 @@ def run(epochs: int = 6):
         "large_sqrt_lr": _spec("large_sqrt_lr", target_batch=2048,
                                warmup_epochs=2, lr_scaling="sqrt"),
     }
+    if mesh is not None:
+        from repro.pipeline.shard import parse_mesh
+        shape = parse_mesh(mesh)
+        p = int(np.prod(shape))
+        variants["large_warmup_sharded"] = _spec(
+            "large_warmup_sharded", target_batch=2048, warmup_epochs=2,
+            microbatch=max(64 // p, 1)).override({
+                "mesh.shape": shape, "mesh.spmm": "ring"})
     recalls = {}
     for name, spec in variants.items():
         r = build(spec, train=train)

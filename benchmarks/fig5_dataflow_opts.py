@@ -4,17 +4,35 @@ Paper: O1+O2+O3 give 8.3x inference / 8.0x training on NGCF-3L-128E
 (movielens-10m, DGL).  Our O-levels: 0=naive per-edge matmuls,
 1=+reorder, 3=+SDDMM reuse (O2 kernelization maps to the Pallas path,
 benchmarked separately in fig8).  CPU-scaled graph; the claim is a ratio.
+
+Configuration and state come from one ``ExperimentSpec`` through the
+Experiment API: the spec names the data and model shapes, ``build``
+materializes the graph and the NGCF parameters (the registry init is
+the seed ``core.ngcf.init_params``); the O-level ablation then runs the
+seed COO forwards over that same data, since O0/O1 only exist there.
 """
 import jax
 
-from benchmarks.common import bench_graph, emit, time_fn
+from benchmarks.common import emit, time_fn
+from repro.api import DataCfg, ExperimentSpec, ModelCfg, PlanCfg, build
 from repro.core import bpr, ngcf
+from repro.core.graph import bipartite_from_numpy
+
+SPEC = ExperimentSpec(
+    name="fig5-ngcf3L",
+    model=ModelCfg(arch="ngcf", embed_dim=64, n_layers=3),
+    data=DataCfg(source="synth", dataset="movielens-10m", edges=20000,
+                 test_frac=0.0, seed=0),
+    plan=PlanCfg(base_batch=512, target_batch=512, microbatch=512,
+                 warmup_epochs=0))
 
 
 def run():
-    data, g = bench_graph(edges=20000)
-    params = ngcf.init_params(jax.random.PRNGKey(0), data.n_users,
-                              data.n_items, 64, 3)
+    r = build(SPEC)
+    data = r.train_data
+    g = bipartite_from_numpy(data.user, data.item, data.n_users,
+                             data.n_items)
+    params = r.params                 # registry init == core.ngcf's
 
     times = {}
     for lvl in (0, 1, 3):
@@ -25,7 +43,8 @@ def run():
     import jax.numpy as jnp
     import numpy as np
     rng = np.random.default_rng(0)
-    u, i, n = bpr.sample_bpr_batch(rng, data.user, data.item, data.n_items, 512)
+    u, i, n = bpr.sample_bpr_batch(rng, data.user, data.item, data.n_items,
+                                   512)
     u, i, n = jnp.asarray(u), jnp.asarray(i), jnp.asarray(n)
     for lvl in (0, 1, 3):
         grad = jax.jit(jax.grad(

@@ -6,6 +6,7 @@ prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -28,6 +29,10 @@ ALL = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--mesh", type=str, default=None,
+                    help="mesh shape ('4', '2x2') forwarded to benchmarks "
+                         "that take one (fig12); pair with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N on CPU")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else ALL
     failures = []
@@ -37,7 +42,11 @@ def main() -> None:
         t0 = time.perf_counter()
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
-            mod.run()
+            kw = {}
+            if args.mesh is not None and \
+                    "mesh" in inspect.signature(mod.run).parameters:
+                kw["mesh"] = args.mesh
+            mod.run(**kw)
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             failures.append(mod_name)

@@ -10,10 +10,18 @@ Fig 14 breakdown (subgraph build share).
 The full-graph arm is one ``ExperimentSpec`` per depth, built through
 the unified Experiment API (``repro.api``) — the accumulated-microbatch
 step (kernel-routed CSR aggregation + planner-derived placement) is the
-engine the launcher actually runs.
+engine the launcher actually runs.  A third arm runs the SAME
+full-graph spec sharded over the visible device mesh (``MeshCfg`` ->
+ring-dispatched SpMM, dp-sharded batch, psum'd grads): the paper's
+winning side of the comparison, scaled out — vs the ``dist.subgraph``
+DistDGL baseline.  With one visible device the mesh degenerates to a
+1-device ring (dispatch overhead only); run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` for a real
+mesh.
 """
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -26,19 +34,27 @@ DATA = DataCfg(source="synth", dataset="movielens-10m", edges=12000,
                test_frac=0.0, seed=0)
 
 
+def _mesh_width() -> int:
+    """Largest power-of-two device count <= min(4, visible devices)."""
+    n = min(4, jax.local_device_count())
+    return 1 << (n.bit_length() - 1)
+
+
 def run():
     rng = np.random.default_rng(0)
+    p = _mesh_width()
 
     results = {}
     for layers in (1, 2, 3):
         # full-graph pipeline step (512-sample batch, 256 microbatch ->
         # real 2x gradient accumulation per measured step)
-        r = build(ExperimentSpec(
+        spec = ExperimentSpec(
             name=f"table6-{layers}L",
             model=ModelCfg(arch="lightgcn", n_layers=layers),
             data=DATA,
             plan=PlanCfg(base_batch=512, target_batch=512, microbatch=256,
-                         warmup_epochs=0)))
+                         warmup_epochs=0))
+        r = build(spec)
         data = r.train_data
         r.step()                                   # warmup/compile
         t0 = time.perf_counter()
@@ -46,6 +62,19 @@ def run():
         t_full = time.perf_counter() - t0
         x_all = jnp.concatenate([r.params["user_embed"],
                                  r.params["item_embed"]])
+
+        # sharded full-graph arm: same spec + a mesh (same global batch:
+        # per-shard microbatch = 256 / P), ring SpMM + psum'd grads
+        rs = build(spec.override({
+            "name": f"table6-{layers}L-sharded",
+            "mesh.shape": (p,), "mesh.spmm": "ring",
+            "plan.microbatch": max(256 // p, 1)}))
+        rs.step()                                  # warmup/compile
+        t0 = time.perf_counter()
+        rs.step()
+        t_shard = time.perf_counter() - t0
+        emit(f"table6/fullgraph_sharded_{layers}L_ms", t_shard * 1e3,
+             f"mesh={p} ring")
 
         # subgraph step (DistDGL-like, 2 simulated workers)
         src = np.concatenate([data.user, data.item + data.n_users])
@@ -66,6 +95,8 @@ def run():
              f"sample={stats.sample_s*1e3:.0f}ms "
              f"expanded={stats.expanded_vertices}")
         emit(f"table6/speedup_{layers}L", 0.0, f"{t_sub/t_full:.2f}x")
+        emit(f"table6/speedup_sharded_{layers}L", 0.0,
+             f"{t_sub/t_shard:.2f}x (mesh={p})")
 
     # paper's scaling claims
     full_growth = results[3][0] / results[1][0]

@@ -35,8 +35,12 @@ class Run:
 
     # ------------------------------------------------------------ training
     def step(self) -> float:
-        """Advance one pipeline step (one accumulated target batch)."""
-        self.state, loss = self.pipeline.step_fn(self.state, self.step_count)
+        """Advance one pipeline step (one accumulated target batch),
+        under the pipeline's sharding context (the loop does the same
+        for ``fit()``-driven steps)."""
+        with self.pipeline.step_context():
+            self.state, loss = self.pipeline.step_fn(self.state,
+                                                     self.step_count)
         self.step_count += 1
         self._recommender = None
         return float(loss)
@@ -64,7 +68,8 @@ class Run:
             on_relayout=self.pipeline.on_relayout,
             on_restore=self.pipeline.apply_plan,
             eval_fn=self.pipeline.eval_fn,
-            start_step=self.step_count)
+            start_step=self.step_count,
+            step_context=self.pipeline.step_context)
         self.state = self.report.final_state
         self.step_count = max_steps
         self._recommender = None
@@ -120,8 +125,10 @@ class Run:
         d = self.train_data
         lines = [f"Run[{self.spec.name}] arch={self.spec.model.arch} "
                  f"data={self.spec.data.source}:{self.spec.data.dataset} "
-                 f"({d.n_users}U x {d.n_items}I, {d.n_edges} train edges)",
-                 self.pipeline.plan.describe()]
+                 f"({d.n_users}U x {d.n_items}I, {d.n_edges} train edges)"]
+        if self.pipeline.shard is not None:
+            lines.append("  " + self.pipeline.shard.describe())
+        lines.append(self.pipeline.plan.describe())
         return "\n".join(lines)
 
 

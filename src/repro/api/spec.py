@@ -4,8 +4,9 @@ The paper's thesis (§5-§7) is that batch size, tensor placement, and
 model depth must be co-tuned; before this module those knobs lived on
 three disconnected surfaces (``repro.configs`` registry entries,
 ``PipelineConfig``/``LoopConfig`` dataclasses, ad-hoc argparse flags).
-``ExperimentSpec`` is the single source of truth: five typed sections
-(model / data / plan / loop / eval) plus the training hyperparameters,
+``ExperimentSpec`` is the single source of truth: six typed sections
+(model / data / plan / mesh / loop / eval) plus the training
+hyperparameters,
 with an exact ``to_dict``/``from_dict``/JSON round-trip and dotted-path
 overrides so a CLI flag, a preset, and a spec file all converge on the
 same object.  ``repro.api.build(spec)`` turns it into a ``Run``.
@@ -54,6 +55,28 @@ class PlanCfg:
 
 
 @dataclasses.dataclass(frozen=True)
+class MeshCfg:
+    """Sharded execution (``pipeline.shard.ShardPlan``): mesh shape and
+    axis names, SpMM dispatch, and the banded-ring knob.  The default
+    ``shape=(1,)`` is the inert single-device plan — bit-identical to
+    the unsharded pipeline (pinned by tests/test_api.py)."""
+    shape: tuple[int, ...] = (1,)
+    axes: tuple[str, ...] | None = None  # None -> auto axis names
+    spmm: str | None = None          # None (auto: ring when P>1) | 'ring'
+    ring_steps: int | None = None    # banded ring: visit n_steps < P owners
+
+    def __post_init__(self):
+        object.__setattr__(self, "shape",
+                           tuple(int(s) for s in self.shape))
+        if self.axes is not None:
+            object.__setattr__(self, "axes",
+                               tuple(str(a) for a in self.axes))
+        if self.ring_steps is not None and self.ring_steps < 1:
+            raise ValueError(f"mesh.ring_steps must be >= 1 (or null for "
+                             f"the full ring), got {self.ring_steps}")
+
+
+@dataclasses.dataclass(frozen=True)
 class LoopCfg:
     """Fault-tolerant-loop knobs consumed by ``runtime.loop``."""
     steps: int = 100
@@ -80,6 +103,7 @@ class ExperimentSpec:
     model: ModelCfg = dataclasses.field(default_factory=ModelCfg)
     data: DataCfg = dataclasses.field(default_factory=DataCfg)
     plan: PlanCfg = dataclasses.field(default_factory=PlanCfg)
+    mesh: MeshCfg = dataclasses.field(default_factory=MeshCfg)
     loop: LoopCfg = dataclasses.field(default_factory=LoopCfg)
     eval: EvalCfg = dataclasses.field(default_factory=EvalCfg)
     optimizer: str = "adam"          # 'adam' | 'sgd'
@@ -138,13 +162,15 @@ class ExperimentSpec:
             warmup_epochs=self.plan.warmup_epochs,
             lr_scaling=self.plan.lr_scaling, l2=self.l2,
             hbm_budget=self.plan.hbm_budget, impl=self.plan.impl,
-            seed=self.seed, eval_k=self.eval.k,
+            seed=self.seed, mesh_shape=self.mesh.shape,
+            mesh_axes=self.mesh.axes, spmm=self.mesh.spmm,
+            ring_steps=self.mesh.ring_steps, eval_k=self.eval.k,
             eval_user_batch=self.eval.user_batch,
             eval_item_block=self.eval.item_block)
 
 
 _SECTIONS = {"model": ModelCfg, "data": DataCfg, "plan": PlanCfg,
-             "loop": LoopCfg, "eval": EvalCfg}
+             "mesh": MeshCfg, "loop": LoopCfg, "eval": EvalCfg}
 
 
 def _fields(cls) -> dict:

@@ -37,9 +37,58 @@ def bucket_edges(src: np.ndarray, dst: np.ndarray, n_nodes: int, p: int,
     and whose src lives on (d+k) mod p, with *local* row indices, padded
     to a uniform size.
 
+    ``n_nodes`` must be a multiple of ``p``; ragged graphs are padded to
+    the next multiple by the shard layer (``pipeline.shard``) before
+    reaching here — padded rows simply own no edges.
+
+    One lexsort pass groups every edge into its (d, k) bucket; within a
+    bucket edges keep their original order (lexsort is stable), matching
+    the per-bucket ``np.nonzero`` selection of the O(P·steps) loop this
+    replaced (parity pinned by tests/test_distributed.py).
+
     Returns (src_l, dst_l, mask, n_local) — each array [p, n_steps, E_b]
     — or (src_l, dst_l, mask, coeff_l, n_local) when ``coeff`` is given.
     """
+    if n_nodes % p:
+        raise ValueError(f"n_nodes {n_nodes} not divisible by {p} devices; "
+                         "pad via pipeline.shard.NodePartition")
+    n_local = n_nodes // p
+    steps = p if n_steps is None else n_steps
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    sdev = src // n_local
+    ddev = dst // n_local
+    rel = (sdev - ddev) % p
+    keep = np.nonzero(rel < steps)[0]          # banded ring drops the rest
+    d_k = ddev[keep]
+    k_k = rel[keep]
+    order = np.lexsort((k_k, d_k))             # stable: (d, k), orig order
+    sel = keep[order]
+    flat_bucket = d_k[order] * steps + k_k[order]
+    counts = np.bincount(flat_bucket, minlength=p * steps)
+    emax = max(int(counts.max()) if counts.size else 1, 1)
+    emax = int(np.ceil(emax / pad_multiple)) * pad_multiple
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    within = np.arange(len(sel)) - np.repeat(starts, counts)
+    slot = flat_bucket * emax + within         # position in the padded cube
+    shape = (p, steps, emax)
+    src_l = np.zeros(shape, np.int32)
+    dst_l = np.zeros(shape, np.int32)
+    mask = np.zeros(shape, bool)
+    src_l.reshape(-1)[slot] = src[sel] % n_local
+    dst_l.reshape(-1)[slot] = dst[sel] % n_local
+    mask.reshape(-1)[slot] = True
+    if coeff is not None:
+        coeff_l = np.zeros(shape, np.float32)
+        coeff_l.reshape(-1)[slot] = np.asarray(coeff)[sel]
+        return src_l, dst_l, mask, coeff_l, n_local
+    return src_l, dst_l, mask, n_local
+
+
+def _bucket_edges_loop(src, dst, n_nodes: int, p: int, coeff=None,
+                       n_steps: int | None = None, pad_multiple: int = 8):
+    """The original O(P·steps) per-bucket selection loop, kept as the
+    layout oracle for the vectorized ``bucket_edges`` (parity test)."""
     if n_nodes % p:
         raise ValueError(f"n_nodes {n_nodes} not divisible by {p} devices")
     n_local = n_nodes // p

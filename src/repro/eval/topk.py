@@ -98,7 +98,7 @@ def streaming_topk(user_e, item_e, k: int, *, user_ids=None,
                    seen_indptr=None, seen_items=None,
                    user_batch: int = DEFAULT_USER_BATCH,
                    item_block: int = DEFAULT_ITEM_BLOCK,
-                   impl: str | None = None):
+                   impl: str | None = None, shard=None):
     """Top-K items per user without materializing the U×I score matrix.
 
     user_e, item_e: [U, D] / [I, D] embedding tables (any tier).
@@ -106,6 +106,12 @@ def streaming_topk(user_e, item_e, k: int, *, user_ids=None,
     seen_indptr/seen_items: user-CSR of already-seen (train) items to
       exclude, by global user id (``BipartiteCSR.seen_csr()`` or
       ``bpr.build_user_csr``).  None -> nothing excluded.
+    shard: optional ``pipeline.shard.ShardPlan`` — user batches are
+      padded to a multiple of the mesh size and their rows sharded over
+      the data-parallel axes, so each device scores its slice of the
+      batch against the (replicated) item blocks.  Results are
+      identical to the unsharded sweep (same block schedule, same
+      merges — only the batch rows are distributed).
     Returns (scores f32[n, k], ids i32[n, k]) numpy arrays, ordered by
     (score desc, id asc); invalid slots are (-inf, -1).
     """
@@ -122,6 +128,8 @@ def streaming_topk(user_e, item_e, k: int, *, user_ids=None,
         return (np.full((n_q, k), NEG_INF, np.float32),
                 np.full((n_q, k), -1, np.int32))
     ub = int(min(user_batch, n_q))
+    if shard is not None and shard.is_sharded:
+        ub = math.ceil(ub / shard.n_shards) * shard.n_shards
     blk = int(min(item_block, n_items))
     n_blocks = math.ceil(n_items / blk)
 
@@ -147,6 +155,11 @@ def streaming_topk(user_e, item_e, k: int, *, user_ids=None,
         smask_d = jnp.asarray(smask)
         carry_s = jnp.full((ub, k), NEG_INF, jnp.float32)
         carry_i = jnp.full((ub, k), -1, jnp.int32)
+        if shard is not None and shard.is_sharded:
+            # distribute the batch rows over the dp axes; the jitted
+            # merge then runs one user-slice per device (GSPMD)
+            ue, seen_d, smask_d, carry_s, carry_i = shard.shard_batch(
+                ue, seen_d, smask_d, carry_s, carry_i)
         for b0 in range(0, n_blocks * blk, blk):
             ids_np = np.arange(b0, b0 + blk)
             valid = ids_np < n_items

@@ -16,6 +16,11 @@ eval all ride along.
   python -m repro.launch.train --arch lightgcn --dataset gowalla --edges 8000
   python -m repro.launch.train --spec my_experiment.json --set plan.microbatch=128
   python -m repro.launch.train --arch gcn-cora --steps 50      # legacy archs
+
+Sharded execution (mesh-parallel full-graph training; CPU CI uses
+XLA_FLAGS=--xla_force_host_platform_device_count=4):
+
+  python -m repro.launch.train --arch lightgcn --mesh 4 --ring-steps 2
 """
 from __future__ import annotations
 
@@ -77,6 +82,16 @@ def build_arg_parser() -> argparse.ArgumentParser:
                     help="held-out streaming-eval cadence in steps; "
                          "0 = final eval only")
     ap.add_argument("--eval-k", type=int)
+    ap.add_argument("--mesh", help="mesh shape for sharded execution, "
+                    "e.g. '4' or '2x2' (spec override mesh.shape); on CPU "
+                    "pair with XLA_FLAGS=--xla_force_host_platform_"
+                    "device_count=N")
+    ap.add_argument("--ring-steps", type=int,
+                    help="banded ring: visit only this many source owners "
+                         "per SpMM (mesh.ring_steps; 0 = full ring)")
+    ap.add_argument("--spmm", choices=["auto", "ring"],
+                    help="aggregation dispatch (mesh.spmm); 'ring' forces "
+                         "the ring route even on one device")
     return ap
 
 
@@ -121,6 +136,13 @@ def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
         ov["loop.eval_every"] = args.eval_every or None
     if args.eval_k is not None:
         ov["eval.k"] = args.eval_k
+    if args.mesh is not None:
+        from repro.pipeline.shard import parse_mesh
+        ov["mesh.shape"] = parse_mesh(args.mesh)
+    if args.ring_steps is not None:
+        ov["mesh.ring_steps"] = args.ring_steps or None
+    if args.spmm is not None:
+        ov["mesh.spmm"] = None if args.spmm == "auto" else args.spmm
     spec = spec.override(ov)
     spec = spec.override(dict(_parse_set(s) for s in args.set))
     # ckpt-dir default last, so it names the arch the run actually uses

@@ -5,15 +5,19 @@ Public surface:
   build_pipeline / Pipeline / PipelineConfig — the engine;
   TrainPlan / build_train_plan               — placement + microbatching;
   MODELS / get_model                         — the model registry;
-  BipartiteCSR / default_impl                — kernel-routed graph ops.
+  BipartiteCSR / default_impl                — kernel-routed graph ops;
+  ShardPlan                                  — mesh-parallel execution
+                                               (ring SpMM, dp batches,
+                                               per-device budgets).
 """
 from repro.pipeline.engine import Pipeline, PipelineConfig, build_pipeline
 from repro.pipeline.plan import TrainPlan, build_train_plan
 from repro.pipeline.registry import MODELS, get_model
+from repro.pipeline.shard import ShardPlan
 from repro.pipeline.sparse import BipartiteCSR, default_impl
 
 __all__ = [
     "Pipeline", "PipelineConfig", "build_pipeline", "TrainPlan",
     "build_train_plan", "MODELS", "get_model", "BipartiteCSR",
-    "default_impl",
+    "default_impl", "ShardPlan",
 ]

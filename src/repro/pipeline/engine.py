@@ -13,9 +13,14 @@ Composes the previously-disconnected subsystems into one pipeline:
   kernel-routed models — registry forwards aggregate through the
                          Pallas/XLA SpMM dispatch (pipeline.sparse);
   EdgeLoader           — deterministic resumable microbatch stream;
+  ShardPlan            — mesh-parallel execution (pipeline.shard): ring
+                         SpMM aggregation, dp-sharded batch chunks with
+                         GSPMD-psum'd grads, per-device planner budgets,
+                         the whole step under dist.hints sharding hints
+                         (``step_context``);
   runtime.loop         — the fault-tolerant outer loop consumes
-                         ``step_fn``/``on_relayout`` produced here
-                         (see runtime.loop.run_pipeline).
+                         ``step_fn``/``on_relayout``/``step_context``
+                         produced here (see runtime.loop.run_pipeline).
 
 The loader iterates at *microbatch* granularity; one engine step drains
 ``microbatches_for_epoch(epoch)`` consecutive microbatches, so the
@@ -23,6 +28,7 @@ warm-up epochs automatically accumulate fewer microbatches per update.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 
@@ -34,10 +40,12 @@ from repro.core import bpr
 from repro.core.large_batch import LargeBatchSchedule
 from repro.data.loader import EdgeLoader
 from repro.data.synth import InteractionData
+from repro.dist.hints import sharding_hints
 from repro.optim import adam, sgd
 from repro.pipeline.plan import (TrainPlan, apply_placements,
                                  build_train_plan)
 from repro.pipeline.registry import get_model
+from repro.pipeline.shard import ShardPlan
 from repro.pipeline.sparse import BipartiteCSR, default_impl
 
 
@@ -50,13 +58,21 @@ class PipelineConfig:
     base_lr: float = 1e-3
     base_batch: int = 256
     target_batch: int = 2048
-    microbatch: int | None = None      # None -> derived from HBM headroom
+    microbatch: int | None = None      # None -> derived from HBM headroom;
+    #                                    per-SHARD when the mesh has P > 1
     warmup_epochs: int = 2
     lr_scaling: str = "linear"         # 'linear' | 'sqrt' (paper ablation)
     l2: float = 1e-4
-    hbm_budget: int | None = None      # planner budget override (bytes)
-    impl: str | None = None            # kernel dispatch override
+    hbm_budget: int | None = None      # planner budget override (bytes/device)
+    impl: str | None = None            # kernel dispatch override; 'ring'
+    #                                    forces the sharded aggregation route
     seed: int = 0
+    # sharded execution (pipeline.shard.ShardPlan); the defaults are the
+    # inert single-device plan — bit-identical to the unsharded pipeline
+    mesh_shape: tuple[int, ...] = (1,)
+    mesh_axes: tuple[str, ...] | None = None   # None -> auto axis names
+    spmm: str | None = None            # None (auto) | 'ring'
+    ring_steps: int | None = None      # banded ring band (n_steps < P)
     # held-out streaming evaluation (repro.eval); cadence lives in the
     # loop's LoopConfig.eval_every — these shape one eval sweep
     eval_k: int = 20
@@ -71,9 +87,16 @@ class Pipeline:
                  holdout: InteractionData | None = None):
         self.cfg = cfg
         self.spec = get_model(cfg.arch)
-        impl = cfg.impl or default_impl()
+        # one ShardPlan flows through every layer below; None = the
+        # inert single-device path, bit-identical to the pre-shard
+        # pipeline.  impl='ring' forces the ring route (BipartiteCSR
+        # builds a degenerate 1-device plan when no mesh is configured).
+        self.shard = ShardPlan.from_config(cfg.mesh_shape, cfg.mesh_axes,
+                                           cfg.spmm, cfg.ring_steps)
         self.g = BipartiteCSR(train.user, train.item, train.n_users,
-                              train.n_items, impl=impl)
+                              train.n_items, impl=cfg.impl, shard=self.shard)
+        self.shard = self.g.shard
+        impl = self.g.impl                     # kernel impl: pallas | xla
         self.n_items = train.n_items
 
         params = self.spec.init(jax.random.PRNGKey(cfg.seed), train.n_users,
@@ -89,11 +112,15 @@ class Pipeline:
         self.plan = build_train_plan(cfg.arch, self.spec, params, opt_state,
                                      self.g, cfg.n_layers, cfg.embed_dim,
                                      sched, impl, hbm_budget=cfg.hbm_budget,
-                                     microbatch=cfg.microbatch)
+                                     microbatch=cfg.microbatch,
+                                     shard=self.shard)
         self._state0 = self.apply_plan({"params": params, "opt": opt_state})
 
+        # the loader iterates at GLOBAL microbatch granularity: one
+        # loader batch feeds all P shards (microbatch rows each)
         self.loader = EdgeLoader(train.user, train.item,
-                                 batch=self.plan.microbatch, seed=cfg.seed)
+                                 batch=self.plan.global_microbatch,
+                                 seed=cfg.seed)
         self._next_step = 0
 
         n_layers = cfg.n_layers
@@ -129,9 +156,38 @@ class Pipeline:
     def apply_plan(self, state):
         """Place every state leaf onto its planned memory tier (used on
         fresh state, after re-layout, and on checkpoint restore — raw
-        restored leaves otherwise land back in HBM)."""
+        restored leaves otherwise land back in HBM).
+
+        Sharded runs place onto the MESH instead: large tables
+        row-sharded (the per-device capacity relief), small leaves
+        replicated.  Host-tier demotions are not applied there — a
+        mesh NamedSharding and a host-memory-kind placement are
+        mutually exclusive device_puts, and silently doing one after
+        the other would just undo the first — so ``n_offloaded`` stays
+        0 and the tier plan remains what it already is on CPU backends:
+        documented intent that drives the microbatch derivation."""
+        if self.shard is not None and self.shard.is_sharded:
+            self.n_offloaded = 0
+            return self.shard.shard_state(state)
         state, self.n_offloaded = apply_placements(state, self.plan.plan)
         return state
+
+    def step_context(self):
+        """The ambient context one engine step runs under: dp/mesh
+        sharding hints on a sharded run (``dist.hints``), nothing on a
+        single-device run.  The fault-tolerant loop enters this around
+        the steps it drives (``runtime.loop.run_training``)."""
+        if self.shard is None:
+            return contextlib.nullcontext()
+        return sharding_hints(dp=self.shard.dp, mesh=self.shard.build_mesh())
+
+    def _device_batch(self, users, pos, neg):
+        """Host arrays -> device arrays, leading dim sharded over the
+        mesh's data-parallel axes when the run is sharded."""
+        u, p, n = jnp.asarray(users), jnp.asarray(pos), jnp.asarray(neg)
+        if self.shard is not None and self.shard.is_sharded:
+            u, p, n = self.shard.shard_batch(u, p, n)
+        return u, p, n
 
     @property
     def sched(self) -> LargeBatchSchedule:
@@ -143,10 +199,13 @@ class Pipeline:
 
     def lr_for_epoch(self, epoch: int) -> float:
         """LR scaled to the batch *actually run* this epoch — the
-        schedule batch rounded up to a whole number of microbatches —
-        so the Goyal scaling rule tracks the realized batch size."""
+        schedule batch rounded up to a whole number of GLOBAL
+        microbatches (all P shards' samples count toward the realized
+        batch) — so the Goyal scaling rule tracks the realized batch
+        size and a sharded run scales exactly like the single-device
+        run with the same global batch."""
         actual = self.plan.microbatches_for_epoch(epoch) \
-            * self.plan.microbatch
+            * self.plan.global_microbatch
         return self.sched.scaled_lr(actual)
 
     def steps_per_epoch(self, epoch: int) -> int:
@@ -166,8 +225,13 @@ class Pipeline:
         tests/test_pipeline.py).  Returns (mean_loss, grads).  A ragged
         final chunk costs one extra jit trace; loader-fed batches are
         always full microbatches.
+
+        Sharded runs chunk at the GLOBAL microbatch (P x per-shard
+        microbatch) and shard each chunk's rows over the mesh, so every
+        device computes its per-shard slice and GSPMD all-reduces
+        (psums) the gradients of the replicated-or-row-sharded params.
         """
-        mu = self.plan.microbatch
+        mu = self.plan.global_microbatch
         n = len(users)
         k = max(1, math.ceil(n / mu))
         loss_sum = None      # device scalar: no host sync inside the loop
@@ -176,8 +240,7 @@ class Pipeline:
             sl = slice(c * mu, min((c + 1) * mu, n))
             w = (sl.stop - sl.start) / n
             loss, grads = self._micro_value_and_grad(
-                params, jnp.asarray(users[sl]), jnp.asarray(pos[sl]),
-                jnp.asarray(neg[sl]))
+                params, *self._device_batch(users[sl], pos[sl], neg[sl]))
             wl = loss * w
             wg = jax.tree.map(lambda t: t * w, grads)
             loss_sum = wl if loss_sum is None else loss_sum + wl
@@ -237,7 +300,12 @@ class Pipeline:
         self._next_step = step
 
     def step_fn(self, state, step: int):
-        """(state, step) -> (state, loss): the loop-consumable step."""
+        """(state, step) -> (state, loss): the loop-consumable step.
+        The CALLER enters ``step_context()`` around it — the
+        fault-tolerant loop does so for every step it drives
+        (``run_training(step_context=...)``), and ``repro.api.Run.step``
+        for direct single steps — so the sharded accumulation step sees
+        the dp/mesh sharding hints exactly once."""
         if step != self._next_step:
             self.seek(step)
         epoch = self.current_epoch()
@@ -250,14 +318,17 @@ class Pipeline:
 
     def on_relayout(self, state):
         """Loop straggler escalation: re-run the planner over the current
-        tensor set and re-place the state (paper §8.1 automation)."""
+        tensor set and re-place the state (paper §8.1 automation).  On a
+        sharded run the re-plan stays per shard: per-device profiles
+        against the per-device budget, and the re-placed state goes back
+        onto the mesh (``apply_plan``'s shard step)."""
         cfg = self.cfg
         self.plan = build_train_plan(
             cfg.arch, self.spec, state["params"], state["opt"], self.g,
             cfg.n_layers, cfg.embed_dim, self.sched, self.plan.impl,
-            hbm_budget=cfg.hbm_budget, microbatch=self.plan.microbatch)
-        state, self.n_offloaded = apply_placements(state, self.plan.plan)
-        return state
+            hbm_budget=cfg.hbm_budget, microbatch=self.plan.microbatch,
+            shard=self.shard)
+        return self.apply_plan(state)
 
     # ---------------------------------------------------------------- eval
     def embeddings(self, state):
@@ -295,13 +366,15 @@ class Pipeline:
         if self._test_pos is None:
             raise RuntimeError("no holdout attached; call attach_holdout")
         from repro.eval import evaluate_embeddings   # lazy: engine<->eval
-        ue, ie = self.embeddings(state)
+        with self.step_context():
+            ue, ie = self.embeddings(state)
         indptr, items = self.g.seen_csr()
         return evaluate_embeddings(
             ue, ie, self._test_pos, k=self.cfg.eval_k,
             seen_indptr=indptr, seen_items=items,
             user_batch=self.eval_user_batch(),
-            item_block=self.cfg.eval_item_block, impl=self.plan.impl)
+            item_block=self.cfg.eval_item_block, impl=self.plan.impl,
+            shard=self.shard)
 
 
 def build_pipeline(cfg: PipelineConfig, train: InteractionData,

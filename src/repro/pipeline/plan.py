@@ -21,10 +21,12 @@ from repro.core.large_batch import LargeBatchSchedule
 from repro.core.tiered_memory import (AccessProfile, HBM_CAPACITY, Plan,
                                       plan_placement)
 from repro.pipeline.registry import ModelSpec
+from repro.pipeline.shard import ShardPlan
 from repro.pipeline.sparse import BipartiteCSR
 
 
-def _leaf_profiles(tree, prefix: str, reads: float, writes: float):
+def _leaf_profiles(tree, prefix: str, reads: float, writes: float,
+                   shard: ShardPlan | None = None):
     out = []
     for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         name = prefix + jax.tree_util.keystr(kp)
@@ -32,6 +34,10 @@ def _leaf_profiles(tree, prefix: str, reads: float, writes: float):
             if hasattr(leaf, "shape") else 0
         if nbytes == 0:
             continue
+        if shard is not None:
+            # per-device profiling: a row-sharded table occupies 1/P of
+            # each shard's budget (its placement decision is per shard)
+            nbytes //= shard.shard_divisor(leaf.shape)
         row = (leaf.shape[-1] if getattr(leaf, "ndim", 0) else 1) * \
             leaf.dtype.itemsize
         out.append(AccessProfile(name, nbytes, reads_per_step=reads,
@@ -40,26 +46,43 @@ def _leaf_profiles(tree, prefix: str, reads: float, writes: float):
 
 
 def profiles_from_state(params, opt_state, g: BipartiteCSR, n_layers: int,
-                        spec: ModelSpec, embed_dim: int) -> list[AccessProfile]:
+                        spec: ModelSpec, embed_dim: int,
+                        shard: ShardPlan | None = None) -> list[AccessProfile]:
     """AccessProfiles over the run's actual tensor set (paper §2.1 memory
-    model, measured from the live pytrees instead of assumed shapes)."""
+    model, measured from the live pytrees instead of assumed shapes).
+
+    With a live ``ShardPlan`` every profile describes the *per-device*
+    shard: row-sharded tables and the edge-bucketed adjacency each
+    occupy 1/P of a device, and the knapsack then runs against the
+    per-device HBM budget — each mesh shard gets its own budget and
+    tier plan (GNNear / MTrainS framing)."""
+    p = shard.n_shards if shard is not None else 1
     profs = []
     # embedding tables + weights: read every layer fwd+bwd, written once
-    profs += _leaf_profiles(params, "params", reads=2.0 * n_layers, writes=1.0)
+    profs += _leaf_profiles(params, "params", reads=2.0 * n_layers,
+                            writes=1.0, shard=shard)
     # optimizer state: one read + one write per update
-    profs += _leaf_profiles(opt_state, "opt", reads=1.0, writes=1.0)
-    # adjacency (both CSR directions): read-only, tiny access granularity
-    profs.append(AccessProfile("graph/csr", g.graph_nbytes(),
+    profs += _leaf_profiles(opt_state, "opt", reads=1.0, writes=1.0,
+                            shard=shard)
+    # adjacency: read-only, tiny access granularity.  Per device: the
+    # CSR stays fully replicated (edge aggs + eval read it everywhere)
+    # while the ring bucket cubes are dst-sharded at 1/P each
+    if shard is None:
+        gbytes = g.graph_nbytes()
+    else:
+        gbytes = g.csr_nbytes() + max(g.ring_nbytes() // p, 1)
+    profs.append(AccessProfile("graph/csr", gbytes,
                                reads_per_step=2.0 * n_layers,
                                writes_per_step=0.0, access_size=8))
     if spec.materializes_messages:
         # per-layer messages are layer-input wide ([E, embed_dim]) even
-        # when the model concatenates layer outputs
+        # when the model concatenates layer outputs; sharded runs
+        # materialize only the local edge partition's share
         row = embed_dim * 4
         for l in range(n_layers):
             profs.append(AccessProfile(
-                f"messages_l{l}", g.n_edges * row, reads_per_step=2.0,
-                writes_per_step=2.0, access_size=row))
+                f"messages_l{l}", max(g.n_edges * row // p, row),
+                reads_per_step=2.0, writes_per_step=2.0, access_size=row))
     return profs
 
 
@@ -104,23 +127,35 @@ def serving_profiles(user_nbytes: int, item_nbytes: int, row: int,
 
 @dataclasses.dataclass
 class TrainPlan:
-    """Everything the engine needs to run one training configuration."""
+    """Everything the engine needs to run one training configuration.
+
+    ``microbatch`` is the *per-shard* microbatch: each of the
+    ``shards`` mesh devices runs that many samples per accumulation
+    chunk, so the global batch is ``shards x microbatch x accum``
+    (``global_microbatch`` per chunk).  Single-device runs have
+    ``shards == 1`` and the two coincide."""
     arch: str
     plan: Plan                     # tier placement over the tensor set
     sched: LargeBatchSchedule
-    microbatch: int
+    microbatch: int                # per-shard
     impl: str                      # kernel dispatch ('pallas' | 'xla')
-    hbm_budget: int
+    hbm_budget: int                # per-device
+    shards: int = 1                # mesh size P
+
+    @property
+    def global_microbatch(self) -> int:
+        return self.microbatch * self.shards
 
     def microbatches_for_epoch(self, epoch: int) -> int:
         return max(1, math.ceil(self.sched.batch_for_epoch(epoch)
-                                / self.microbatch))
+                                / self.global_microbatch))
 
     def describe(self) -> str:
         tiers = {}
         for name, p in self.plan.placements.items():
             tiers.setdefault(p.tier, []).append(name)
-        lines = [f"TrainPlan[{self.arch}] impl={self.impl} "
+        shard_txt = f" shards={self.shards}" if self.shards > 1 else ""
+        lines = [f"TrainPlan[{self.arch}] impl={self.impl}{shard_txt} "
                  f"microbatch={self.microbatch} "
                  f"target_batch={self.sched.target_batch} "
                  f"hbm={self.plan.hbm_used/2**20:.1f}/"
@@ -137,16 +172,22 @@ def build_train_plan(arch: str, spec: ModelSpec, params, opt_state,
                      g: BipartiteCSR, n_layers: int, embed_dim: int,
                      sched: LargeBatchSchedule, impl: str,
                      hbm_budget: int | None = None,
-                     microbatch: int | None = None) -> TrainPlan:
+                     microbatch: int | None = None,
+                     shard: ShardPlan | None = None) -> TrainPlan:
+    """Profile -> place -> derive the microbatch.  ``hbm_budget`` is
+    *per device*; with a ``ShardPlan`` the profiles describe per-device
+    shards and the derived microbatch is the per-shard one."""
     budget = int(hbm_budget) if hbm_budget is not None else HBM_CAPACITY
     profs = profiles_from_state(params, opt_state, g, n_layers, spec,
-                                embed_dim)
+                                embed_dim, shard=shard)
     plan = plan_placement(profs, hbm_budget=budget)
+    shards = shard.n_shards if shard is not None else 1
     if microbatch is None:
         microbatch = derive_microbatch(budget - plan.hbm_used,
                                        spec.out_dim(embed_dim, n_layers),
-                                       sched.target_batch)
-    return TrainPlan(arch, plan, sched, int(microbatch), impl, budget)
+                                       max(1, sched.target_batch // shards))
+    return TrainPlan(arch, plan, sched, int(microbatch), impl, budget,
+                     shards=shards)
 
 
 # ---------------------------------------------------------------- placement

@@ -21,6 +21,18 @@ kernels run unweighted and the degree scalings apply at node level —
 no [E, D] message matrix is ever materialized for LightGCN/GCN (the
 planner's tensor set reflects this; NGCF's Hadamard messages still
 materialize one edge matrix per layer).
+
+Sharded dispatch: alongside ``pallas``/``xla`` there is a ``ring``
+route (``ShardPlan.wants_ring``) that runs node aggregation through
+``dist.ring_spmm`` over the *unified* node space (users then items,
+padded to a multiple of the shard count): features row-sharded over the
+device ring, edges bucketed by (dst device, ring distance), compute on
+bucket k overlapping the collective-permute fetching block k+1 — the
+paper's NUMA-blocked Fig 11 schedule as a device ring.  The symmetric
+propagation becomes ONE ring SpMM per layer (both directions at once,
+since the unified adjacency is symmetric), and every ring op carries a
+custom VJP that is the transpose-direction ring — the same
+gradients-map-onto-the-same-kernels structure (§4) as the CSR path.
 """
 from __future__ import annotations
 
@@ -30,6 +42,7 @@ import numpy as np
 
 from repro.kernels import ops as kops
 from repro.kernels.spmm import build_csr_by_dst
+from repro.pipeline.shard import ShardPlan
 
 
 def default_impl() -> str:
@@ -83,6 +96,174 @@ def _make_edge_agg(indptr, dst_sorted, n_dst, impl):
     return agg
 
 
+# ---------------------------------------------------------------- ring
+class _RingGraph:
+    """Ring-SpMM aggregations over the unified node space of one
+    bipartite graph (user u -> row u, item i -> row n_users + i, rows
+    padded to a multiple of the shard count).  Padded rows own no
+    edges, so they aggregate to zero and are sliced back off.
+
+    ``sym`` applies the symmetric adjacency (both edge directions in
+    one ring pass); ``ui``/``iu`` apply only the user->item /
+    item->user direction.  Every op resolves its bucket cubes lazily at
+    first trace (LightGCN/GCN only ever build ``sym``; the directional
+    cubes exist only for models that call them, i.e. NGCF).
+    """
+
+    def __init__(self, shard: ShardPlan, user: np.ndarray, item: np.ndarray,
+                 n_users: int, n_items: int):
+        from repro.dist.ring_spmm import bucket_edges, make_ring_spmm
+        self._bucket_edges = bucket_edges
+        self._make_ring_spmm = make_ring_spmm
+        self.shard = shard
+        self.n_users = int(n_users)
+        self.n_items = int(n_items)
+        self.part = shard.partition(n_users + n_items)
+        self._src_ui = np.asarray(user, np.int64)
+        self._dst_ui = np.asarray(item, np.int64) + n_users
+        self._fns: dict[str, object] = {}
+
+    def _banded(self) -> bool:
+        s = self.shard.ring_steps
+        return s is not None and s < self.shard.n_shards
+
+    def _build(self, src: np.ndarray, dst: np.ndarray,
+               n_steps: int | None):
+        """One direction's ring closure: x_pad [n_pad, D] -> A x_pad.
+        The bucket cubes stay host numpy: ``_build`` may first run
+        inside a jit trace (ops resolve lazily), and memoizing arrays
+        device-put during a trace would leak tracers into later
+        traces — numpy closures bake in as constants per compile."""
+        src_l, dst_l, mask, n_local = self._bucket_edges(
+            src, dst, self.part.n_pad, self.shard.n_shards,
+            n_steps=n_steps)
+        fn = self._make_ring_spmm(self.shard.build_mesh(), self.shard.dp,
+                                  n_local, n_steps=n_steps)
+        return lambda x: fn(x, src_l, dst_l, mask)
+
+    def _band_kept(self, src: np.ndarray, dst: np.ndarray):
+        """The subset of edges the banded forward actually applies."""
+        p = self.shard.n_shards
+        n_local = self.part.n_local
+        rel = (src // n_local - dst // n_local) % p
+        keep = rel < self.shard.ring_steps
+        return src[keep], dst[keep]
+
+    def _fn(self, which: str):
+        """Memoized ring closures.  ``*_T`` keys are the exact transposes
+        of the banded forwards: the band keeps edge (s, d) by the ring
+        distance of s's owner AHEAD of d's — an asymmetric criterion —
+        so the VJP cannot reuse a banded reverse ring (it would apply a
+        different edge set than A^T).  Instead the transpose buckets the
+        reversed KEPT edges over the full ring.  Unbanded, transposes
+        alias the plain reverses (sym is self-adjoint, ui/iu are mutual
+        transposes)."""
+        if which not in self._fns:
+            s, d = self._src_ui, self._dst_ui
+            sym_s = np.concatenate([s, d])
+            sym_d = np.concatenate([d, s])
+            steps = self.shard.ring_steps
+            if which == "sym":
+                self._fns[which] = self._build(sym_s, sym_d, steps)
+            elif which == "ui":
+                self._fns[which] = self._build(s, d, steps)
+            elif which == "iu":
+                self._fns[which] = self._build(d, s, steps)
+            elif not self._banded():
+                alias = {"sym_T": "sym", "ui_T": "iu", "iu_T": "ui"}
+                self._fns[which] = self._fn(alias[which])
+            else:
+                base = {"sym_T": (sym_s, sym_d), "ui_T": (s, d),
+                        "iu_T": (d, s)}[which]
+                ks, kd = self._band_kept(*base)
+                self._fns[which] = self._build(kd, ks, None)
+        return self._fns[which]
+
+    def est_nbytes(self) -> int:
+        """Exact bytes the sym bucket cubes WILL occupy, computed from
+        bucket counts without building them — the planner profiles the
+        graph before any op has traced (cubes resolve lazily), so it
+        needs this analytic size, not the built-so-far total.  The sym
+        set (2E edges) is also a fair proxy for NGCF's ui+iu pair."""
+        p = self.shard.n_shards
+        steps = self.shard.ring_steps if self.shard.ring_steps is not None \
+            else p
+        n_local = self.part.n_local
+        s = np.concatenate([self._src_ui, self._dst_ui])
+        d = np.concatenate([self._dst_ui, self._src_ui])
+        rel = (s // n_local - d // n_local) % p
+        keep = rel < steps
+        dk = (d[keep] // n_local) * steps + rel[keep]
+        counts = np.bincount(dk, minlength=p * steps)
+        emax = max(int(counts.max()) if counts.size else 1, 1)
+        emax = int(np.ceil(emax / 8)) * 8          # bucket_edges pad_multiple
+        return p * steps * emax * (4 + 4 + 1)      # src_l + dst_l + mask
+
+    def nbytes(self) -> int:
+        """Planner-facing bucket bytes: the built cubes once any exist
+        (unbanded transpose keys alias their base closure — each counted
+        once), the analytic sym estimate before first trace."""
+        total = 0
+        seen: set[int] = set()
+        for fn in self._fns.values():
+            if id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            for cell in getattr(fn, "__closure__", None) or ():
+                v = cell.cell_contents
+                if hasattr(v, "nbytes"):
+                    total += int(v.nbytes)
+        return max(total, self.est_nbytes())
+
+    # ------------------------------------------------------- lifted ops
+    def _lift(self, x, offset: int):
+        """[n, D] rows -> unified padded [n_pad, D] at row ``offset``."""
+        z = jnp.zeros((self.part.n_pad, x.shape[-1]), x.dtype)
+        return jax.lax.dynamic_update_slice(z, x, (offset, 0))
+
+    def make_sym(self):
+        """x_pad -> A_sym x_pad; VJP = the exact transpose ring (A_sym
+        itself unbanded; the kept-edge transpose when banded).  The
+        closures resolve ``_fn`` lazily at first trace, so bucket cubes
+        only materialize for the ops a model actually uses."""
+
+        @jax.custom_vjp
+        def sym(x):
+            return self._fn("sym")(x)
+
+        sym.defvjp(lambda x: (self._fn("sym")(x), None),
+                   lambda _, ct: (self._fn("sym_T")(ct),))
+        return sym
+
+    def _apply(self, which, x, in_off, out_off, n_out):
+        h = self._fn(which)(self._lift(x, in_off))
+        return jax.lax.dynamic_slice(h, (out_off, 0), (n_out, x.shape[-1]))
+
+    def make_u2i(self):
+        """x_user [n_users, D] -> [n_items, D]; VJP rides the transpose
+        ring (item->user direction), mirroring the CSR custom VJPs."""
+        nu, ni = self.n_users, self.n_items
+
+        @jax.custom_vjp
+        def u2i(x):
+            return self._apply("ui", x, 0, nu, ni)
+
+        u2i.defvjp(lambda x: (self._apply("ui", x, 0, nu, ni), None),
+                   lambda _, ct: (self._apply("ui_T", ct, nu, 0, nu),))
+        return u2i
+
+    def make_i2u(self):
+        nu, ni = self.n_users, self.n_items
+
+        @jax.custom_vjp
+        def i2u(x):
+            return self._apply("iu", x, nu, 0, nu)
+
+        i2u.defvjp(lambda x: (self._apply("iu", x, nu, 0, nu), None),
+                   lambda _, ct: (self._apply("iu_T", ct, 0, nu, ni),))
+        return i2u
+
+
 class BipartiteCSR:
     """Both CSR directions of a user-item graph + kernel-routed ops.
 
@@ -99,8 +280,16 @@ class BipartiteCSR:
 
     def __init__(self, user: np.ndarray, item: np.ndarray, n_users: int,
                  n_items: int, edge_mask: np.ndarray | None = None,
-                 impl: str | None = None):
-        self.impl = impl or default_impl()
+                 impl: str | None = None, shard: ShardPlan | None = None):
+        # 'ring' is a first-class dispatch value: it forces the sharded
+        # aggregation route (degenerate 1-device ring when no mesh is
+        # given); node-level kernels still need a pallas/xla backend.
+        if impl == "ring" and shard is None:
+            shard = ShardPlan(spmm="ring")
+        self.impl = default_impl() if impl in (None, "ring") else impl
+        self.shard = shard
+        self.spmm = "ring" if (shard is not None and shard.wants_ring) \
+            else self.impl
         user = np.asarray(user, np.int32)
         item = np.asarray(item, np.int32)
         if edge_mask is not None:
@@ -132,12 +321,23 @@ class BipartiteCSR:
         self.rsqrt_du = jnp.asarray(1.0 / np.sqrt(np.maximum(du, 1.0)))
         self.rsqrt_di = jnp.asarray(1.0 / np.sqrt(np.maximum(di, 1.0)))
 
-        self.agg_u2i = _make_adj_matmul(self.ui_indptr, self.ui_src, n_items,
-                                        self.iu_indptr, self.iu_src, n_users,
-                                        self.impl)
-        self.agg_i2u = _make_adj_matmul(self.iu_indptr, self.iu_src, n_users,
-                                        self.ui_indptr, self.ui_src, n_items,
-                                        self.impl)
+        self._ring = None
+        self._ring_sym = None
+        if self.spmm == "ring":
+            self._ring = _RingGraph(self.shard, user, item, n_users, n_items)
+            self._ring_sym = self._ring.make_sym()
+            self.agg_u2i = self._ring.make_u2i()
+            self.agg_i2u = self._ring.make_i2u()
+        else:
+            self.agg_u2i = _make_adj_matmul(self.ui_indptr, self.ui_src,
+                                            n_items, self.iu_indptr,
+                                            self.iu_src, n_users, self.impl)
+            self.agg_i2u = _make_adj_matmul(self.iu_indptr, self.iu_src,
+                                            n_users, self.ui_indptr,
+                                            self.ui_src, n_items, self.impl)
+        # edge-level aggregation ([E, D] values, dst-sorted) stays on the
+        # node-local kernel path under every dispatch: the values are
+        # already per-edge, so there is no feature block to rotate
         self.edge_agg_item = _make_edge_agg(self.ui_indptr, self.ui_dst,
                                             n_items, self.impl)
         self.edge_agg_user = _make_edge_agg(self.iu_indptr, self.iu_dst,
@@ -150,16 +350,39 @@ class BipartiteCSR:
         already-seen item ids."""
         return self._seen_indptr, self._seen_items
 
-    def graph_nbytes(self) -> int:
-        """Bytes of the adjacency structure (both CSR directions)."""
+    def csr_nbytes(self) -> int:
+        """Bytes of the CSR adjacency alone (both directions) — stays
+        fully REPLICATED per device under every dispatch (edge aggs and
+        the eval seen-structure still read it)."""
         arrs = (self.ui_indptr, self.ui_src, self.ui_dst, self.iu_indptr,
                 self.iu_src, self.iu_dst, self.perm_ui_to_iu)
         return int(sum(a.size * a.dtype.itemsize for a in arrs))
 
+    def ring_nbytes(self) -> int:
+        """Bytes of the ring bucket cubes (built or analytically
+        estimated); 0 off the ring dispatch.  The cubes are dst-sharded
+        over the mesh — each device holds 1/P of them."""
+        return self._ring.nbytes() if self._ring is not None else 0
+
+    def graph_nbytes(self) -> int:
+        """Bytes of the whole adjacency structure (CSR + ring cubes)."""
+        return self.csr_nbytes() + self.ring_nbytes()
+
     def sym_propagate(self, x_user, x_item):
         """One symmetric-normalized propagation (LightGCN/GCN layer):
         h_i = sum_e x_u / sqrt(d_u d_i), both directions.  The separable
-        coefficient lets both directions run as unweighted gather-SpMM."""
+        coefficient lets both directions run as unweighted gather-SpMM —
+        and, under the ring dispatch, as ONE ring SpMM over the unified
+        (symmetric) adjacency: both directions ride a single rotation
+        schedule, the distributed analogue of the paper's fused
+        NUMA-blocked pass."""
+        if self._ring_sym is not None:
+            part = self._ring.part
+            z = jnp.concatenate([x_user * self.rsqrt_du[:, None],
+                                 x_item * self.rsqrt_di[:, None]], axis=0)
+            h = part.trim(self._ring_sym(part.pad_rows(z)))
+            return (h[:self.n_users] * self.rsqrt_du[:, None],
+                    h[self.n_users:] * self.rsqrt_di[:, None])
         h_item = self.agg_u2i(x_user * self.rsqrt_du[:, None]) \
             * self.rsqrt_di[:, None]
         h_user = self.agg_i2u(x_item * self.rsqrt_di[:, None]) \

@@ -53,7 +53,8 @@ def run_training(cfg: LoopConfig, init_state: Any,
                  on_relayout: Callable[[Any], Any] | None = None,
                  on_restore: Callable[[Any], Any] | None = None,
                  eval_fn: Callable[[Any, int], dict] | None = None,
-                 start_step: int = 0) -> LoopReport:
+                 start_step: int = 0,
+                 step_context: Callable[[], Any] | None = None) -> LoopReport:
     """step_fn(state, step) -> (state, loss).  Resumes if a checkpoint
     exists (``on_restore`` post-processes the restored state — e.g.
     re-applying memory-tier placements that raw checkpoint leaves lose);
@@ -63,7 +64,12 @@ def run_training(cfg: LoopConfig, init_state: Any,
     ``cfg.ckpt_dir=None`` runs in memory: no restore, no saves.
     ``start_step`` positions the loop when ``init_state`` has already
     trained that far (repro.api.Run continuing in memory); a restored
-    checkpoint overrides it."""
+    checkpoint overrides it.  ``step_context`` (zero-arg, returns a
+    context manager) is entered around every step the loop drives — a
+    sharded pipeline passes its mesh/dp sharding-hints context here
+    (``Pipeline.step_context``), so the accumulation step runs under
+    ``dist.hints.sharding_hints`` without the loop knowing about
+    meshes."""
     start = start_step
     state = init_state
     resumed = None
@@ -79,7 +85,11 @@ def run_training(cfg: LoopConfig, init_state: Any,
     pending = None
     for step in range(start, cfg.max_steps):
         t0 = time.perf_counter()
-        state, loss = step_fn(state, step)
+        if step_context is not None:
+            with step_context():
+                state, loss = step_fn(state, step)
+        else:
+            state, loss = step_fn(state, step)
         dt = time.perf_counter() - t0
         losses.append(float(loss))
         if (eval_fn is not None and cfg.eval_every
@@ -116,4 +126,5 @@ def run_pipeline(cfg: LoopConfig, pipeline) -> LoopReport:
     return run_training(cfg, pipeline.init_state(), pipeline.step_fn,
                         on_relayout=pipeline.on_relayout,
                         on_restore=pipeline.apply_plan,
-                        eval_fn=getattr(pipeline, "eval_fn", None))
+                        eval_fn=getattr(pipeline, "eval_fn", None),
+                        step_context=getattr(pipeline, "step_context", None))

@@ -10,8 +10,9 @@ import pytest
 
 from repro import configs as config_registry
 from repro.api import (DataCfg, EvalCfg, Experiment, ExperimentSpec,
-                       LoopCfg, ModelCfg, PlanCfg, build, get_preset,
-                       load_data, preset_names, register_data_source)
+                       LoopCfg, MeshCfg, ModelCfg, PlanCfg, build,
+                       get_preset, load_data, preset_names,
+                       register_data_source)
 from repro.pipeline import build_pipeline
 
 
@@ -61,6 +62,47 @@ def test_override_dotted_paths():
     assert out.model.arch == spec.model.arch        # untouched fields kept
     with pytest.raises(KeyError):
         spec.override({"model.width": 64})
+
+
+# ------------------------------------------------------------- mesh section
+def test_mesh_cfg_roundtrip_and_coercion():
+    """MeshCfg survives the exact dict round-trip AND the JSON round-trip
+    (JSON turns tuples into lists; __post_init__ coerces them back, so
+    equality is structural, not representational)."""
+    spec = _smoke_spec().override({"mesh.shape": (4,),
+                                   "mesh.axes": ("data",),
+                                   "mesh.spmm": "ring",
+                                   "mesh.ring_steps": 2})
+    assert ExperimentSpec.from_dict(spec.to_dict()) == spec
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    rt = ExperimentSpec.from_json(spec.to_json())
+    assert rt.mesh.shape == (4,) and isinstance(rt.mesh.shape, tuple)
+    assert rt.mesh.axes == ("data",) and isinstance(rt.mesh.axes, tuple)
+    # the default mesh is the inert single-device plan
+    assert _smoke_spec().mesh == MeshCfg()
+    assert MeshCfg().shape == (1,)
+
+
+def test_mesh_cli_flags_equal_spec_overrides():
+    from repro.launch.train import build_arg_parser, spec_from_args
+    args = build_arg_parser().parse_args([
+        "--preset", "lightgcn-smoke", "--mesh", "2x2", "--ring-steps", "2",
+        "--spmm", "ring", "--ckpt-dir", "/tmp/ck"])
+    spec = spec_from_args(args)
+    expect = get_preset("lightgcn-smoke").override(
+        {"mesh.shape": (2, 2), "mesh.ring_steps": 2, "mesh.spmm": "ring",
+         "loop.ckpt_dir": "/tmp/ck/lightgcn"})
+    assert spec == expect
+
+
+def test_mesh_single_device_spec_is_inert():
+    """MeshCfg() (the default) must not change the engine's behavior at
+    all: no ShardPlan is built and the pipeline config equals the
+    pre-mesh projection field for field."""
+    run = build(_smoke_spec())
+    assert run.pipeline.shard is None
+    cfg = _smoke_spec().to_pipeline_config()
+    assert cfg.mesh_shape == (1,) and cfg.spmm is None
 
 
 # ------------------------------------------------------------- presets
