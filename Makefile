@@ -1,11 +1,17 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-fast test-slow test-multidevice bench-smoke bench train-smoke examples check-bytecode
+.PHONY: test test-fast test-slow test-multidevice check-plan bench-smoke bench train-smoke examples check-bytecode
 
-# tier-1 suite (the CI gate) + pass/fail delta vs the seed baseline
+# tier-1 suite (the CI gate) + pass/fail delta vs the seed baseline,
+# then the placement-plan golden-snapshot gate (per-topology)
 test:
 	$(PY) tools/check_test_delta.py
+	$(PY) tools/check_plan_snapshot.py
+
+# placement-plan golden snapshots only (tools/plan_snapshots.json)
+check-plan:
+	$(PY) tools/check_plan_snapshot.py
 
 # fast subset: skip slow property/parity sweeps + multi-device subprocess tests
 test-fast:

@@ -16,25 +16,30 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.api import get_preset
-from repro.core.tiered_memory import (_slow_tier_penalty,
-                                      gnn_recsys_profiles, plan_placement)
+from repro.memory import get_policy, get_topology, gnn_recsys_profiles
 from repro.pipeline.shard import ShardPlan
 
 
-def run():
-    # planner (AppDirect analog) vs "everything slow tier" (Optane-alone)
-    # vs hardware-managed proxy (random placement), at the paper-scale
-    # shapes the lightgcn-full preset declares
+def run(topology: str = "tpu-hbm-host"):
+    # placement policies by name (the repro.memory registry) at the
+    # paper-scale shapes the lightgcn-full preset declares: greedy
+    # planner (AppDirect analog) vs paper-recipe pins vs "everything
+    # slow tier" (Optane-alone)
     spec = get_preset("lightgcn-full")
+    topo = get_topology(topology)
     profiles = gnn_recsys_profiles(
         spec.data.n_users, spec.data.n_items, spec.data.edges,
         spec.model.embed_dim, spec.model.n_layers)
     total = sum(p.nbytes for p in profiles)
-    budget = int(total * 0.3)
-    plan = plan_placement(profiles, hbm_budget=budget)
-    slow_all = sum(_slow_tier_penalty(p) for p in profiles)
+    budgets = {topo.fast.name: int(total * 0.3),
+               topo.slow.name: topo.slow.capacity}
+    plan = get_policy("greedy")(profiles, topo, budgets=budgets)
+    recipe = get_policy("paper-recipe")(profiles, topo, budgets=budgets)
+    slow_all = get_policy("all-slow")(profiles, topo).est_step_penalty_s
     emit("fig10/planner_step_penalty_s", 0.0,
-         f"{plan.est_step_penalty_s:.4f} ({spec.name})")
+         f"{plan.est_step_penalty_s:.4f} ({spec.name}, {topo.name})")
+    emit("fig10/paper_recipe_step_penalty_s", 0.0,
+         f"{recipe.est_step_penalty_s:.4f} (§6 pins, real pinned cost)")
     emit("fig10/slowtier_only_step_penalty_s", 0.0, f"{slow_all:.4f}")
     emit("fig10/planner_speedup_vs_slow_only", 0.0,
          f"{slow_all/max(plan.est_step_penalty_s, 1e-9):.2f}x "

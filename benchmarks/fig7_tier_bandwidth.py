@@ -2,31 +2,46 @@
 
 The paper measures Optane vs DRAM (read 37%, write 7%, nt-write 18% of
 DRAM; random-access utilization saturating at 256 B writes / >4 KB
-reads).  Our tiers are HBM (819 GB/s) vs host-DRAM-over-PCIe; the table
-below reports the cost model used by the TieredMemoryPlanner (these
-constants ARE the planner's inputs) plus a measured CPU-cache proxy for
-the access-size effect (sequential vs strided reads).
+reads).  Our tiers are declarative ``repro.memory.TierTopology``
+presets — this benchmark prints the cost model any registered preset
+feeds the placement policies (these numbers ARE the planner's inputs),
+plus a measured CPU-cache proxy for the access-size effect.
+
+``--topology`` selects the preset (default ``tpu-hbm-host``); run
+``python -m benchmarks.run --only fig7 --topology dram-optane-appdirect``
+or this module directly.
 """
 import time
 
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import tiered_memory as tm
+from repro.memory import get_topology
 
 
-def run():
-    emit("fig7/hbm_read_GBs", 0.0, f"{tm.HBM_BW_READ/1e9:.0f}")
-    emit("fig7/hbm_write_GBs", 0.0, f"{tm.HBM_BW_WRITE/1e9:.0f}")
-    emit("fig7/host_read_GBs", 0.0,
-         f"{tm.HOST_BW_READ/1e9:.0f} ({tm.HOST_BW_READ/tm.HBM_BW_READ*100:.0f}% of HBM; paper Optane/DRAM read=37%)")
-    emit("fig7/host_write_GBs", 0.0,
-         f"{tm.HOST_BW_WRITE/1e9:.0f} ({tm.HOST_BW_WRITE/tm.HBM_BW_WRITE*100:.1f}% of HBM; paper Optane/DRAM write=7-18%)")
+def run(topology: str = "tpu-hbm-host"):
+    topo = get_topology(topology)
+    fast, slow = topo.fast, topo.slow
+    for t in topo.tiers:
+        emit(f"fig7/{topo.name}/{t.name}_read_GBs", 0.0,
+             f"{t.read_bw/1e9:.0f}")
+        emit(f"fig7/{topo.name}/{t.name}_write_GBs", 0.0,
+             f"{t.write_bw/1e9:.0f}")
+        emit(f"fig7/{topo.name}/{t.name}_capacity_GiB", 0.0,
+             f"{t.capacity/2**30:.0f}")
+    emit(f"fig7/{topo.name}/slow_over_fast_read", 0.0,
+         f"{slow.read_bw/fast.read_bw*100:.0f}% "
+         "(paper Optane/DRAM read=37%)")
+    emit(f"fig7/{topo.name}/slow_over_fast_write", 0.0,
+         f"{slow.write_bw/fast.write_bw*100:.1f}% "
+         "(paper Optane/DRAM write=7-18%)")
 
-    # access-size bandwidth utilization (planner model, paper Fig 7b)
+    # access-size bandwidth utilization (the preset's saturation curve,
+    # paper Fig 7b)
     for access in (4, 64, 256, 512, 4096):
-        util = min(1.0, access / 256.0)
-        emit(f"fig7/access_{access}B_write_util", 0.0, f"{util*100:.0f}%")
+        emit(f"fig7/{topo.name}/access_{access}B_slow_util", 0.0,
+             f"{slow.utilization(access)*100:.1f}% "
+             f"(saturates at {slow.granularity}B)")
 
     # measured proxy on this host: sequential vs strided (embedding-row
     # sized) reads — demonstrates the same access-size cliff the paper
@@ -45,3 +60,14 @@ def run():
     emit("fig7/host_rand4B_read_GBs_measured", 0.0,
          f"{rand/1e9:.2f} ({rand/seq*100:.0f}% of sequential)")
     return {}
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from repro.memory import topology_names
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--topology", default="tpu-hbm-host",
+                    choices=topology_names(),
+                    help="registered TierTopology preset to print")
+    run(ap.parse_args().topology)

@@ -33,6 +33,10 @@ def main() -> None:
                     help="mesh shape ('4', '2x2') forwarded to benchmarks "
                          "that take one (fig12); pair with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N on CPU")
+    ap.add_argument("--topology", type=str, default=None,
+                    help="registered TierTopology preset forwarded to "
+                         "benchmarks that take one (fig7, fig8, fig10), "
+                         "e.g. dram-optane-appdirect")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else ALL
     failures = []
@@ -43,9 +47,11 @@ def main() -> None:
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
             kw = {}
-            if args.mesh is not None and \
-                    "mesh" in inspect.signature(mod.run).parameters:
+            params = inspect.signature(mod.run).parameters
+            if args.mesh is not None and "mesh" in params:
                 kw["mesh"] = args.mesh
+            if args.topology is not None and "topology" in params:
+                kw["topology"] = args.topology
             mod.run(**kw)
         except Exception:  # noqa: BLE001
             traceback.print_exc()

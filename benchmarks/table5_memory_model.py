@@ -8,8 +8,9 @@ footprint from the planner profiles (paper §2.1 ~500 GB check is in
 tests/test_core.py).
 """
 from benchmarks.common import emit
-from repro.core.tiered_memory import gnn_recsys_profiles
+from repro.api import get_preset
 from repro.dist.subgraph import max_subgraph_batch
+from repro.memory import get_topology, gnn_recsys_profiles
 
 
 def run():
@@ -23,14 +24,22 @@ def run():
                                       avg_degree)
             emit(f"table5/subgraph_maxbatch_{layers}L_{embed}E", 0.0,
                  f"nosamp={no_samp} samp100={samp}")
-    # full-graph footprint is depth-LINEAR (the paper's §2.1 model)
+    # full-graph footprint is depth-LINEAR (the paper's §2.1 model); the
+    # shapes come from the paper-scale lightgcn-full preset, the depth
+    # axis is swept
+    full = get_preset("lightgcn-full")
     for layers in (1, 2, 3):
-        prof = gnn_recsys_profiles(349_000, 53_000, 250_000_000, 128, layers)
+        prof = gnn_recsys_profiles(full.data.n_users, full.data.n_items,
+                                   full.data.edges, full.model.embed_dim,
+                                   layers)
         gb = sum(p.nbytes for p in prof) / 1e9
-        emit(f"table5/fullgraph_footprint_{layers}L_128E_GB", 0.0,
-             f"{gb:.0f}")
-    # TPU pod capacity: 256 x 16 GiB HBM + host tier
-    emit("table5/tpu_pod_hbm_GB", 0.0, f"{256*16}")
+        emit(f"table5/fullgraph_footprint_{layers}L_"
+             f"{full.model.embed_dim}E_GB", 0.0, f"{gb:.0f}")
+    # TPU pod capacity: 256 chips x the registered preset's fast tier,
+    # plus its host tier
+    topo = get_topology("tpu-hbm-host")
+    emit("table5/tpu_pod_hbm_GB", 0.0,
+         f"{256 * topo.fast.capacity // 2**30}")
     emit("table5/note", 0.0,
          "full-graph m-x25 3L fits one pod's aggregate HBM; subgraph "
          "training without sampling cannot run 3L at ANY batch (paper '/')")

@@ -12,7 +12,7 @@ driven entirely by the unified Experiment API.
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 from repro.api import Experiment, get_preset
-from repro.core.tiered_memory import gnn_recsys_profiles, plan_placement
+from repro.memory import get_policy, get_topology, gnn_recsys_profiles
 
 
 def main():
@@ -49,19 +49,25 @@ def main():
 
     # --- the paper's technique at production scale: where do the tensors
     # live when the model is m-x25-sized (the lightgcn-full preset) and
-    # the fast tier is 4 chips' worth of HBM?
+    # the fast tier is 4 chips' worth of HBM?  Topology and policy are
+    # swappable by name (repro.memory; MemoryCfg on the spec) — the
+    # paper's Memory-Mode-vs-AppDirect comparison is the same call with
+    # a different topology string.
     full = get_preset("lightgcn-full")
     profiles = gnn_recsys_profiles(full.data.n_users, full.data.n_items,
                                    full.data.edges, full.model.embed_dim,
                                    full.model.n_layers)
-    plan = plan_placement(profiles, hbm_budget=64 * 2**30)
-    print(f"\ntiered-memory plan ({full.name} scale, "
-          "64 GiB fast-tier budget):")
-    for p in profiles:
-        print(f"  {p.name:16s} {p.nbytes/2**30:7.2f} GiB -> "
-              f"{plan.tier(p.name)}")
-    print(f"  est. step penalty from slow tier: "
-          f"{plan.est_step_penalty_s*1e3:.1f} ms")
+    for topo_name in ("tpu-hbm-host", "dram-optane-appdirect"):
+        topo = get_topology(topo_name)
+        plan = get_policy("greedy")(
+            profiles, topo, budgets={topo.fast.name: 64 * 2**30})
+        print(f"\ntiered-memory plan ({full.name} scale, topology="
+              f"{topo_name}, 64 GiB fast-tier budget):")
+        for p in profiles:
+            print(f"  {p.name:16s} {p.nbytes/2**30:7.2f} GiB -> "
+                  f"{plan.tier(p.name)}")
+        print(f"  est. step penalty from slow tier: "
+              f"{plan.est_step_penalty_s*1e3:.1f} ms")
 
 
 if __name__ == "__main__":

@@ -18,11 +18,11 @@ from repro.api.experiment import Experiment
 from repro.api.presets import get_preset, preset_names, register_preset
 from repro.api.run import Run, build
 from repro.api.spec import (DataCfg, EvalCfg, ExperimentSpec, LoopCfg,
-                            MeshCfg, ModelCfg, PlanCfg)
+                            MemoryCfg, MeshCfg, ModelCfg, PlanCfg)
 
 __all__ = [
     "Experiment", "ExperimentSpec", "ModelCfg", "DataCfg", "PlanCfg",
-    "MeshCfg", "LoopCfg", "EvalCfg", "Run", "build", "get_preset",
-    "register_preset", "preset_names", "load_data", "register_data_source",
-    "DATA_SOURCES",
+    "MeshCfg", "MemoryCfg", "LoopCfg", "EvalCfg", "Run", "build",
+    "get_preset", "register_preset", "preset_names", "load_data",
+    "register_data_source", "DATA_SOURCES",
 ]

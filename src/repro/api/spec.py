@@ -4,8 +4,8 @@ The paper's thesis (§5-§7) is that batch size, tensor placement, and
 model depth must be co-tuned; before this module those knobs lived on
 three disconnected surfaces (``repro.configs`` registry entries,
 ``PipelineConfig``/``LoopConfig`` dataclasses, ad-hoc argparse flags).
-``ExperimentSpec`` is the single source of truth: six typed sections
-(model / data / plan / mesh / loop / eval) plus the training
+``ExperimentSpec`` is the single source of truth: seven typed sections
+(model / data / plan / mesh / memory / loop / eval) plus the training
 hyperparameters,
 with an exact ``to_dict``/``from_dict``/JSON round-trip and dotted-path
 overrides so a CLI flag, a preset, and a spec file all converge on the
@@ -77,6 +77,31 @@ class MeshCfg:
 
 
 @dataclasses.dataclass(frozen=True)
+class MemoryCfg:
+    """Memory-tier subsystem (``repro.memory``): which registered
+    ``TierTopology`` the run models, which placement policy assigns
+    tensors to tiers, per-tier capacity overrides, and name->tier pins.
+    The default reproduces the pre-redesign TPU planner bit for bit;
+    the paper's §5 Memory-Mode-vs-AppDirect comparison is a one-line
+    change of ``topology``.  Exact JSON round-trip like ``MeshCfg``."""
+    topology: str = "tpu-hbm-host"   # repro.memory.topology_names()
+    policy: str = "greedy"           # repro.memory.policy_names()
+    capacity: dict | None = None     # tier name -> bytes override
+    pins: dict | None = None         # tensor (sub)name -> tier name
+    #                                  (e.g. {"params['item_embed']": "slow"})
+
+    def __post_init__(self):
+        if self.capacity is not None:
+            object.__setattr__(self, "capacity",
+                               {str(k): int(v)
+                                for k, v in self.capacity.items()})
+        if self.pins is not None:
+            object.__setattr__(self, "pins",
+                               {str(k): str(v)
+                                for k, v in self.pins.items()})
+
+
+@dataclasses.dataclass(frozen=True)
 class LoopCfg:
     """Fault-tolerant-loop knobs consumed by ``runtime.loop``."""
     steps: int = 100
@@ -104,6 +129,7 @@ class ExperimentSpec:
     data: DataCfg = dataclasses.field(default_factory=DataCfg)
     plan: PlanCfg = dataclasses.field(default_factory=PlanCfg)
     mesh: MeshCfg = dataclasses.field(default_factory=MeshCfg)
+    memory: MemoryCfg = dataclasses.field(default_factory=MemoryCfg)
     loop: LoopCfg = dataclasses.field(default_factory=LoopCfg)
     eval: EvalCfg = dataclasses.field(default_factory=EvalCfg)
     optimizer: str = "adam"          # 'adam' | 'sgd'
@@ -164,13 +190,18 @@ class ExperimentSpec:
             hbm_budget=self.plan.hbm_budget, impl=self.plan.impl,
             seed=self.seed, mesh_shape=self.mesh.shape,
             mesh_axes=self.mesh.axes, spmm=self.mesh.spmm,
-            ring_steps=self.mesh.ring_steps, eval_k=self.eval.k,
+            ring_steps=self.mesh.ring_steps,
+            memory_topology=self.memory.topology,
+            memory_policy=self.memory.policy,
+            memory_capacity=self.memory.capacity,
+            memory_pins=self.memory.pins, eval_k=self.eval.k,
             eval_user_batch=self.eval.user_batch,
             eval_item_block=self.eval.item_block)
 
 
 _SECTIONS = {"model": ModelCfg, "data": DataCfg, "plan": PlanCfg,
-             "mesh": MeshCfg, "loop": LoopCfg, "eval": EvalCfg}
+             "mesh": MeshCfg, "memory": MemoryCfg, "loop": LoopCfg,
+             "eval": EvalCfg}
 
 
 def _fields(cls) -> dict:

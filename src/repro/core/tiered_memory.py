@@ -1,206 +1,75 @@
-"""TieredMemoryPlanner — the paper's Optane guidance productized for TPU.
+"""DEPRECATED shim — the tiered-memory planner moved to ``repro.memory``.
 
-The paper's §5-§6 problem: a fast small tier (DRAM; here HBM, 819 GB/s,
-16 GiB/chip) and a slow big tier (Optane; here host DRAM over PCIe,
-~16 GB/s effective, asymmetric R/W like Optane's 40%/20%), and a set of
-tensors whose traffic profile decides where each should live.  The paper
-solved it by hand per kernel (AppDirect + numactl); §8.1 points at
-AutoTM's ILP as the automated future.  We ship that automation:
+The redesigned subsystem replaces this module's hardcoded two-tier
+constants with a declarative, registered ``TierTopology``
+(``repro.memory.get_topology``), its single greedy/exact planner pair
+with a named ``PlacementPolicy`` registry, and its advisory placement
+with a functional ``TieredExecutor``.  Everything below delegates to
+the new package on the ``tpu-hbm-host`` preset (whose tiers carry
+exactly the bandwidth/capacity values these constants hardcoded), so
+legacy callers keep identical numbers:
 
-  * every tensor registers an AccessProfile (bytes, reads/step,
-    writes/step, access granularity);
-  * the planner scores each tensor by the *step-time penalty per byte* of
-    demoting it to the slow tier, exactly the quantity the paper's Fig 8
-    measures (write-heavy tensors are penalized by the write-bandwidth
-    asymmetry — SDDMM outputs hurt most, mirroring its 7.7x slowdown);
-  * greedy knapsack: keep the highest-penalty tensors in HBM until the
-    budget runs out (optimal here because cost is additive and the only
-    constraint is capacity — a classic density-ordered fractional
-    knapsack rounded down, plus an exact DP for small tensor counts);
-  * emits per-tensor JAX sharding/memory_kind assignments plus the
-    per-kernel write-policy table (streaming vs accumulate).
+  * ``AccessProfile`` / ``gnn_recsys_profiles`` — re-exported from
+    ``repro.memory.profiles``;
+  * ``plan_placement`` / ``plan_placement_exact`` — the ``greedy`` /
+    ``exact`` policies on the default topology.  One behavioural fix
+    rides the delegation: tensors pinned to the slow tier now
+    contribute their *real* step penalty to ``est_step_penalty_s``
+    (they used to count 0.0);
+  * the ``HBM_*`` / ``HOST_*`` constants — read off the preset's tiers.
 
-Placement granularity is whole tensors (pages in the paper; per-tensor is
-the JAX-addressable unit — the paper's page-granular AppDirect beats
-cacheline-granular Memory Mode for the same reason: GNNRecSys access size
-is an embedding row, hundreds of bytes).
+New code should use ``repro.memory`` directly.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 
-# Tier bandwidths (bytes/s).  HBM per TPU v5e chip; host link = PCIe gen3
-# x16-ish effective, with Optane-like R/W asymmetry on the slow tier.
-HBM_BW_READ = 819e9
-HBM_BW_WRITE = 819e9
-HOST_BW_READ = 16e9
-HOST_BW_WRITE = 8e9          # slow tier writes are ~half of reads (Optane-like)
-HBM_CAPACITY = 16 * 2**30    # per chip
-DEFAULT_HOST_CAPACITY = 512 * 2**30
+from repro.memory.policies import (Placement, Plan, place_exact,  # noqa: F401
+                                   place_greedy)
+from repro.memory.profiles import (AccessProfile,  # noqa: F401 — re-export
+                                   gnn_recsys_profiles)
+from repro.memory.topology import get_topology
+
+_DEFAULT = get_topology("tpu-hbm-host")
+
+# Tier bandwidths (bytes/s), read off the tpu-hbm-host preset tiers —
+# kept for legacy importers (benchmarks predating the redesign).
+HBM_BW_READ = _DEFAULT.fast.read_bw
+HBM_BW_WRITE = _DEFAULT.fast.write_bw
+HOST_BW_READ = _DEFAULT.slow.read_bw
+HOST_BW_WRITE = _DEFAULT.slow.write_bw
+HBM_CAPACITY = _DEFAULT.fast.capacity
+DEFAULT_HOST_CAPACITY = _DEFAULT.slow.capacity
 
 
-@dataclasses.dataclass(frozen=True)
-class AccessProfile:
-    """Static per-step traffic descriptor for one tensor."""
-    name: str
-    nbytes: int
-    reads_per_step: float = 1.0     # full-tensor read equivalents
-    writes_per_step: float = 0.0    # full-tensor write equivalents
-    access_size: int = 512          # bytes per touch (embedding row, tile, ...)
-    pinned: str | None = None       # force 'hbm' or 'host'
-
-    def step_traffic(self) -> tuple[float, float]:
-        return (self.nbytes * self.reads_per_step,
-                self.nbytes * self.writes_per_step)
+def _warn(name: str, repl: str) -> None:
+    warnings.warn(f"repro.core.tiered_memory.{name} is deprecated; use "
+                  f"{repl}", DeprecationWarning, stacklevel=3)
 
 
 def _slow_tier_penalty(p: AccessProfile) -> float:
-    """Extra seconds/step if this tensor is demoted to the slow tier.
-
-    Small-access-size tensors are additionally penalized: like Optane,
-    the host link only reaches peak bandwidth at >=256B transfers
-    (paper Fig 7b); we model utilization = min(1, access/256)."""
-    rd, wr = p.step_traffic()
-    util = min(1.0, p.access_size / 256.0)
-    t_fast = rd / HBM_BW_READ + wr / HBM_BW_WRITE
-    t_slow = rd / (HOST_BW_READ * util) + wr / (HOST_BW_WRITE * util)
-    return t_slow - t_fast
+    """Deprecated: use ``TierTopology.demotion_penalty``."""
+    return _DEFAULT.demotion_penalty(p)
 
 
-@dataclasses.dataclass
-class Placement:
-    tier: str                 # 'hbm' | 'host'
-    penalty_s: float          # step-time cost if demoted (0 when pinned)
-
-
-@dataclasses.dataclass
-class Plan:
-    placements: dict[str, Placement]
-    hbm_used: int
-    hbm_budget: int
-    est_step_penalty_s: float  # total slow-tier penalty actually incurred
-
-    def tier(self, name: str) -> str:
-        return self.placements[name].tier
-
-    def memory_kind(self, name: str) -> str:
-        return {"hbm": "device", "host": "pinned_host"}[self.tier(name)]
-
-
-def plan_placement(profiles: list[AccessProfile], hbm_budget: int = HBM_CAPACITY,
+def plan_placement(profiles: list[AccessProfile],
+                   hbm_budget: int = HBM_CAPACITY,
                    host_budget: int = DEFAULT_HOST_CAPACITY,
                    exact_threshold: int = 16) -> Plan:
-    """Per-tensor tier placement.  Exact knapsack (AutoTM-style) when the
-    free-tensor count is small (the realistic case: tens of named
-    tensors per model); greedy density-ordered beyond that."""
-    n_free = sum(1 for p in profiles if p.pinned is None)
-    if 0 < n_free <= exact_threshold:
-        plan = plan_placement_exact(profiles, hbm_budget=hbm_budget)
-        host_used = sum(p.nbytes for p in profiles
-                        if plan.placements[p.name].tier == "host")
-        if host_used > host_budget:
-            raise MemoryError("host tier over budget")
-        return plan
-    placements: dict[str, Placement] = {}
-    hbm_used = 0
-    host_used = 0
-    # pinned first
-    free: list[tuple[float, AccessProfile]] = []
-    for p in profiles:
-        if p.pinned == "hbm":
-            placements[p.name] = Placement("hbm", 0.0)
-            hbm_used += p.nbytes
-        elif p.pinned == "host":
-            placements[p.name] = Placement("host", 0.0)
-            host_used += p.nbytes
-        else:
-            free.append((_slow_tier_penalty(p) / max(p.nbytes, 1), p))
-    if hbm_used > hbm_budget:
-        raise MemoryError(f"pinned tensors ({hbm_used/2**30:.1f} GiB) exceed "
-                          f"HBM budget ({hbm_budget/2**30:.1f} GiB)")
-    # highest penalty-density first into HBM
-    free.sort(key=lambda t: -t[0])
-    total_penalty = 0.0
-    for _, p in free:
-        pen = _slow_tier_penalty(p)
-        if hbm_used + p.nbytes <= hbm_budget:
-            placements[p.name] = Placement("hbm", pen)
-            hbm_used += p.nbytes
-        else:
-            if host_used + p.nbytes > host_budget:
-                raise MemoryError(f"tensor {p.name} fits neither tier")
-            placements[p.name] = Placement("host", pen)
-            host_used += p.nbytes
-            total_penalty += pen
-    return Plan(placements, hbm_used, hbm_budget, total_penalty)
+    """Deprecated: ``repro.memory.get_policy('greedy')`` on a registered
+    topology."""
+    _warn("plan_placement", "repro.memory.place_greedy / get_policy")
+    return place_greedy(
+        profiles, _DEFAULT,
+        budgets={_DEFAULT.fast.name: int(hbm_budget),
+                 _DEFAULT.slow.name: int(host_budget)},
+        exact_threshold=exact_threshold)
 
 
 def plan_placement_exact(profiles: list[AccessProfile],
                          hbm_budget: int = HBM_CAPACITY) -> Plan:
-    """Exact 0/1-knapsack DP (small tensor counts only) — the AutoTM-style
-    ILP answer, used in tests to certify the greedy plan."""
-    free = [p for p in profiles if p.pinned is None]
-    if len(free) > 24:
-        raise ValueError("exact planner is for small tensor counts")
-    pinned_hbm = sum(p.nbytes for p in profiles if p.pinned == "hbm")
-    if pinned_hbm > hbm_budget:
-        raise MemoryError("pinned tensors exceed HBM budget")
-    best_keep: tuple[float, tuple[int, ...]] = (-1.0, ())
-    import itertools
-    for keep in itertools.product([0, 1], repeat=len(free)):
-        size = sum(p.nbytes for p, k in zip(free, keep) if k)
-        pinned_size = sum(p.nbytes for p in profiles if p.pinned == "hbm")
-        if size + pinned_size > hbm_budget:
-            continue
-        value = sum(_slow_tier_penalty(p) for p, k in zip(free, keep) if k)
-        if value > best_keep[0]:
-            best_keep = (value, keep)
-    placements = {}
-    hbm_used = 0
-    penalty = 0.0
-    for p in profiles:
-        if p.pinned:
-            placements[p.name] = Placement(p.pinned, 0.0)
-            if p.pinned == "hbm":
-                hbm_used += p.nbytes
-    for p, k in zip(free, best_keep[1]):
-        pen = _slow_tier_penalty(p)
-        if k:
-            placements[p.name] = Placement("hbm", pen)
-            hbm_used += p.nbytes
-        else:
-            placements[p.name] = Placement("host", pen)
-            penalty += pen
-    return Plan(placements, hbm_used, hbm_budget, penalty)
-
-
-# ---------------------------------------------------------------------------
-# Workload profile builders (used by configs and benchmarks)
-
-def gnn_recsys_profiles(n_users: int, n_items: int, n_edges: int,
-                        embed_dim: int, n_layers: int,
-                        dtype_bytes: int = 4) -> list[AccessProfile]:
-    """Paper §2.1 memory model: len(m)*|E| per layer for messages,
-    len(x)*|V| for embeddings, doubled for training (grads)."""
-    v = n_users + n_items
-    row = embed_dim * dtype_bytes
-    out = [
-        AccessProfile("embeddings", v * row, reads_per_step=2 * n_layers,
-                      writes_per_step=2.0, access_size=row),
-        AccessProfile("embed_grads", v * row, reads_per_step=1.0,
-                      writes_per_step=2 * n_layers, access_size=row),
-        AccessProfile("opt_state", 2 * v * row, reads_per_step=1.0,
-                      writes_per_step=1.0, access_size=row),
-        AccessProfile("graph_coo", 2 * n_edges * 8, reads_per_step=2 * n_layers,
-                      writes_per_step=0.0, access_size=8),
-    ]
-    for l in range(n_layers):
-        # SDDMM output: written once (streaming), read once by SpMM; and
-        # re-read/re-written in backward.
-        out.append(AccessProfile(f"messages_l{l}", n_edges * row,
-                                 reads_per_step=2.0, writes_per_step=2.0,
-                                 access_size=row))
-        out.append(AccessProfile(f"activations_l{l}", v * row,
-                                 reads_per_step=2.0, writes_per_step=2.0,
-                                 access_size=row))
-    return out
+    """Deprecated: ``repro.memory.get_policy('exact')`` on a registered
+    topology."""
+    _warn("plan_placement_exact", "repro.memory.place_exact / get_policy")
+    return place_exact(profiles, _DEFAULT,
+                       budgets={_DEFAULT.fast.name: int(hbm_budget)})

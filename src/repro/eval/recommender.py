@@ -1,22 +1,30 @@
 """Recommender — the serving facade over trained embeddings.
 
 Snapshots a trained model's final (user, item) embeddings, places them
-across the memory tiers with the same ``TieredMemoryPlanner`` that
-places training tensors (serving traffic profile: the item table is
-streamed block-by-block for every query batch, the user table is only
+across the memory tiers with the same policy registry that places
+training tensors (serving traffic profile: the item table is streamed
+block-by-block for every query batch, the user table is only
 row-gathered for the users in the batch), and answers batched top-K
 queries through the streaming scorer — peak memory per query batch is
 ``O(batch × (K + block))`` however large the catalogue.
+
+A demoted table is placed *functionally*: onto its tier's JAX memory
+kind when the backend has one, and behind the row-granular
+``HostResident`` gather facade otherwise — the scorer then streams only
+each query batch's user rows / each item block out of the host store,
+so demotion changes where bytes live and stream from, not just the
+``describe()`` string.
 """
 from __future__ import annotations
 
-import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.tiered_memory import HBM_CAPACITY, plan_placement
 from repro.eval.topk import (DEFAULT_ITEM_BLOCK, DEFAULT_USER_BATCH,
                              streaming_topk)
-from repro.pipeline.plan import host_offload_sharding, serving_profiles
+from repro.memory import HostResident, TieredExecutor, get_policy, \
+    get_topology
+from repro.pipeline.plan import serving_profiles
 from repro.pipeline.sparse import default_impl
 
 
@@ -26,7 +34,9 @@ class Recommender:
     def __init__(self, user_e, item_e, *, seen_indptr=None, seen_items=None,
                  k: int = 20, user_batch: int = DEFAULT_USER_BATCH,
                  item_block: int = DEFAULT_ITEM_BLOCK,
-                 impl: str | None = None, hbm_budget: int | None = None):
+                 impl: str | None = None, hbm_budget: int | None = None,
+                 topology: str = "tpu-hbm-host", policy: str = "greedy",
+                 pins: dict | None = None):
         self.k = int(k)
         self.user_batch = int(user_batch)
         self.item_block = int(item_block)
@@ -36,34 +46,45 @@ class Recommender:
         self.seen_items = None if seen_items is None \
             else np.asarray(seen_items, np.int64)
 
-        user_e = jax.numpy.asarray(user_e)
-        item_e = jax.numpy.asarray(item_e)
-        budget = int(hbm_budget) if hbm_budget is not None else HBM_CAPACITY
+        user_e = np.asarray(user_e)
+        item_e = np.asarray(item_e)
+        topo = get_topology(topology)
+        budgets = topo.capacities()
+        if hbm_budget is not None:
+            budgets[topo.fast.name] = int(hbm_budget)
         row = int(item_e.shape[-1]) * item_e.dtype.itemsize
-        profs = serving_profiles(user_e.size * user_e.dtype.itemsize,
-                                 item_e.size * item_e.dtype.itemsize, row)
-        self.plan = plan_placement(profs, hbm_budget=budget)
-        host = host_offload_sharding()
-        self.n_offloaded = 0
-        for name, table in (("serve/user_embed", user_e),
-                            ("serve/item_embed", item_e)):
-            if host is not None and self.plan.tier(name) == "host":
-                table = jax.device_put(table, host)
-                self.n_offloaded += 1
-            if name.endswith("user_embed"):
-                self.user_e = table
-            else:
-                self.item_e = table
+        profs = serving_profiles(user_e.nbytes, item_e.nbytes, row)
+        self.plan = get_policy(policy)(profs, topo, budgets=budgets,
+                                       pins=pins)
+        executor = TieredExecutor(self.plan, prefixes=())
+
+        def place_table(name, table):
+            placed = executor.host_table(name, table)
+            # fast-tier tables become resident device arrays once, so
+            # every recommend() reuses them instead of re-uploading
+            return placed if isinstance(placed, HostResident) or \
+                not self.plan.is_fast(name) else jnp.asarray(placed)
+
+        self.user_e = place_table("serve/user_embed", user_e)
+        self.item_e = place_table("serve/item_embed", item_e)
+        self.n_offloaded = sum(
+            1 for n in ("serve/user_embed", "serve/item_embed")
+            if not self.plan.is_fast(n))
         self.n_users = int(self.user_e.shape[0])
         self.n_items = int(self.item_e.shape[0])
 
     @classmethod
     def from_pipeline(cls, pipeline, state, **kw) -> "Recommender":
         """Snapshot a trained ``repro.pipeline.Pipeline``: final forward
-        embeddings + the train CSR as the seen-item exclusion set."""
+        embeddings + the train CSR as the seen-item exclusion set,
+        placed on the pipeline's own topology/policy."""
         user_e, item_e = pipeline.embeddings(state)
         indptr, items = pipeline.g.seen_csr()
         kw.setdefault("impl", pipeline.plan.impl)
+        kw.setdefault("topology", pipeline.topology)
+        kw.setdefault("policy", pipeline.cfg.memory_policy)
+        kw.setdefault("hbm_budget", pipeline.cfg.hbm_budget)
+        kw.setdefault("pins", pipeline.cfg.memory_pins)
         return cls(user_e, item_e, seen_indptr=indptr, seen_items=items, **kw)
 
     def recommend(self, user_ids, k: int | None = None,
@@ -83,6 +104,8 @@ class Recommender:
         tiers = {n: p.tier for n, p in self.plan.placements.items()}
         return (f"Recommender[{self.n_users}U x {self.n_items}I] "
                 f"impl={self.impl} k={self.k} block={self.item_block} "
+                f"topology={self.plan.topology.name} "
+                f"policy={self.plan.policy} "
                 f"user_embed->{tiers['serve/user_embed']} "
                 f"item_embed->{tiers['serve/item_embed']} "
                 f"(offloaded={self.n_offloaded})")

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kops
+from repro.memory.executor import HostResident
 from repro.pipeline.sparse import default_impl
 
 NEG_INF = float("-inf")
@@ -101,7 +102,12 @@ def streaming_topk(user_e, item_e, k: int, *, user_ids=None,
                    impl: str | None = None, shard=None):
     """Top-K items per user without materializing the U×I score matrix.
 
-    user_e, item_e: [U, D] / [I, D] embedding tables (any tier).
+    user_e, item_e: [U, D] / [I, D] embedding tables (any tier).  A
+      table demoted to a slow tier without a JAX memory kind arrives as
+      a ``repro.memory.HostResident`` facade: its bytes stay in the
+      host store and only each query batch's user rows / each item
+      block stream to the device (row-granular gathers — bit-identical
+      to the resident path, which copies the same bytes).
     user_ids: which users to score (default: all rows of user_e).
     seen_indptr/seen_items: user-CSR of already-seen (train) items to
       exclude, by global user id (``BipartiteCSR.seen_csr()`` or
@@ -116,8 +122,12 @@ def streaming_topk(user_e, item_e, k: int, *, user_ids=None,
     (score desc, id asc); invalid slots are (-inf, -1).
     """
     impl = impl or default_impl()
-    user_e = jnp.asarray(user_e)
-    item_e = jnp.asarray(item_e)
+    user_host = user_e if isinstance(user_e, HostResident) else None
+    item_host = item_e if isinstance(item_e, HostResident) else None
+    if user_host is None:
+        user_e = jnp.asarray(user_e)
+    if item_host is None:
+        item_e = jnp.asarray(item_e)
     n_items = int(item_e.shape[0])
     if user_ids is None:
         user_ids = np.arange(user_e.shape[0], dtype=np.int32)
@@ -145,7 +155,8 @@ def streaming_topk(user_e, item_e, k: int, *, user_ids=None,
         sel = user_ids[lo:lo + ub]
         b = len(sel)
         sel_p = np.pad(sel, (0, ub - b))        # pad batch: static jit shape
-        ue = _gather_rows(user_e, sel_p, impl)
+        ue = jnp.asarray(user_host.take(sel_p)) if user_host is not None \
+            else _gather_rows(user_e, sel_p, impl)
         if seen_indptr is not None:
             seen, smask = _padded_seen(sel_p, seen_indptr, seen_items, max_deg)
         else:
@@ -165,7 +176,10 @@ def streaming_topk(user_e, item_e, k: int, *, user_ids=None,
             valid = ids_np < n_items
             block_ids = jnp.asarray(
                 np.where(valid, ids_np, -1).astype(np.int32))
-            ie_blk = _gather_rows(item_e, np.where(valid, ids_np, 0), impl)
+            safe_ids = np.where(valid, ids_np, 0)
+            ie_blk = jnp.asarray(item_host.block(safe_ids)) \
+                if item_host is not None else _gather_rows(item_e, safe_ids,
+                                                           impl)
             carry_s, carry_i = _merge_block(
                 ue, ie_blk, block_ids, seen_d, smask_d, jnp.int32(b0),
                 carry_s, carry_i, k=k)

@@ -1,12 +1,18 @@
 """Jit'd dispatch wrappers: impl='xla' (jnp gather/segment ops — used for
 multi-pod lowering) vs impl='pallas' (TPU kernels; interpret=True on CPU).
 
-The per-kernel write policy table is the productized form of the paper's
-§6 guideline (nt-write for SDDMM, normal write for SpMM): the Pallas
-kernels bake the policy into their memory structure, and the table is
-what the TieredMemoryPlanner reads when costing kernel traffic.
+The per-kernel write-policy table (the paper's §6 guideline: nt-write
+for SDDMM, normal write for SpMM) is no longer hardcoded here — it is
+*emitted from the placement plan* (``repro.memory.Plan.write_policy()``
+/ ``TrainPlan.write_policy``), which knows the run's topology and where
+each kernel's output stream actually lands.  The Pallas kernels bake
+the structural side in (SDDMM streams with no VMEM accumulator, SpMM
+accumulates).  The module-level ``WRITE_POLICY`` name survives as a
+deprecated shim that answers with the default topology's table.
 """
 from __future__ import annotations
+
+import warnings
 
 import jax
 
@@ -16,12 +22,18 @@ from repro.kernels import ref as _ref
 from repro.kernels import sddmm as _sddmm
 from repro.kernels import spmm as _spmm
 
-# paper §6 guideline, per kernel
-WRITE_POLICY = {
-    "sddmm": "streaming",      # nt-write analogue: no VMEM accumulator
-    "spmm": "accumulate",      # normal write: VMEM-resident accumulator
-    "embedding_bag": "accumulate",
-}
+
+def __getattr__(name):
+    if name == "WRITE_POLICY":
+        warnings.warn(
+            "repro.kernels.ops.WRITE_POLICY is deprecated; the per-kernel "
+            "write-policy table is emitted from the placement plan "
+            "(repro.memory.Plan.write_policy / TrainPlan.write_policy)",
+            DeprecationWarning, stacklevel=2)
+        from repro.memory import get_policy, get_topology
+        plan = get_policy("all-fast")([], get_topology("tpu-hbm-host"))
+        return plan.write_policy()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def _on_tpu() -> bool:

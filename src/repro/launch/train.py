@@ -92,6 +92,20 @@ def build_arg_parser() -> argparse.ArgumentParser:
     ap.add_argument("--spmm", choices=["auto", "ring"],
                     help="aggregation dispatch (mesh.spmm); 'ring' forces "
                          "the ring route even on one device")
+    ap.add_argument("--memory-topology",
+                    help="registered TierTopology to model "
+                         "(repro.memory.topology_names(), e.g. "
+                         "dram-optane-appdirect; spec override "
+                         "memory.topology)")
+    ap.add_argument("--placement-policy",
+                    help="registered placement policy "
+                         "(repro.memory.policy_names(), e.g. paper-recipe; "
+                         "spec override memory.policy)")
+    ap.add_argument("--pin", action="append", default=[],
+                    metavar="TENSOR=TIER",
+                    help="pin a tensor (by profile name or substring) to a "
+                         "tier, e.g. --pin item_embed=slow (repeatable; "
+                         "merges into memory.pins)")
     return ap
 
 
@@ -143,6 +157,18 @@ def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
         ov["mesh.ring_steps"] = args.ring_steps or None
     if args.spmm is not None:
         ov["mesh.spmm"] = None if args.spmm == "auto" else args.spmm
+    if args.memory_topology is not None:
+        ov["memory.topology"] = args.memory_topology
+    if args.placement_policy is not None:
+        ov["memory.policy"] = args.placement_policy
+    if args.pin:
+        pins = dict(spec.memory.pins or {})
+        for entry in args.pin:
+            name, sep, tier = entry.partition("=")
+            if not sep:
+                raise SystemExit(f"--pin expects TENSOR=TIER, got {entry!r}")
+            pins[name.strip()] = tier.strip()
+        ov["memory.pins"] = pins
     spec = spec.override(ov)
     spec = spec.override(dict(_parse_set(s) for s in args.set))
     # ckpt-dir default last, so it names the arch the run actually uses

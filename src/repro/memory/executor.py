@@ -1,0 +1,184 @@
+"""TieredExecutor — makes a placement Plan *functional* on every backend.
+
+The pre-redesign ``apply_placements`` was advisory: on backends without
+a ``pinned_host`` memory kind (CPU CI) a host demotion changed nothing
+but a ``describe()`` string.  The executor gives every backend a real
+slow tier:
+
+  * **memory-kind path** (TPU): a demoted leaf is ``device_put`` onto
+    its tier's JAX ``memory_kind`` — XLA then streams it over the host
+    link on access, which is exactly the traffic the cost model prices.
+    ``fetch``/``commit`` are no-ops here.
+  * **host-store path** (everything else): a demoted leaf's bytes are
+    committed to host memory as a numpy buffer — it genuinely leaves
+    the device buffer pool.  Each step the executor *fetches* demoted
+    leaves back onto the device (``jax.device_put`` dispatches the H2D
+    copy asynchronously, overlapping the previous step's tail),
+    computes, then *commits* the updated bytes back to the host store.
+    The executor retains no reference to the device copies — once a
+    step's state is committed the only live device buffers are the ones
+    the next fetch creates, so demoted bytes genuinely leave the device
+    pool between steps.  One fetch serves every microbatch of the step
+    — the tables don't change inside one accumulated batch — so the
+    stream runs at step granularity upward and microbatch granularity
+    during serving gathers.
+
+Both paths round-trip bytes exactly (device↔host copies of the same
+float32 buffers), so a demoted run computes *bit-identical* results to
+the all-fast run — on the ``uniform`` topology the cost model prices
+that demotion at exactly 0.0 and CPU CI pins the bit-identity
+(tests/test_memory.py).
+
+``HostResident`` is the row-granular serving facade: a slow-tier
+embedding table whose bytes live in the host store and whose rows are
+gathered/streamed on demand (``take``/``block``), so a query batch
+moves O(batch × D) bytes instead of the whole table —
+``eval.topk.streaming_topk`` consumes it directly.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.memory.policies import Plan
+
+
+def memory_kind_sharding(kind: str | None):
+    """A single-device sharding onto the given memory kind, when the
+    backend exposes one; None otherwise (then the host-store path takes
+    over)."""
+    if kind is None:
+        return None
+    try:
+        dev = jax.devices()[0]
+        kinds = {m.kind for m in dev.addressable_memories()}
+        if kind not in kinds:
+            return None
+        return jax.sharding.SingleDeviceSharding(dev, memory_kind=kind)
+    except Exception:  # noqa: BLE001 — backends without memories API
+        return None
+
+
+class HostResident:
+    """A slow-tier table: bytes live in host memory, rows stream to the
+    device on demand.  Shape/dtype/nbytes mirror the array so facades
+    (Recommender) can treat it like one."""
+
+    def __init__(self, arr):
+        self.arr = np.asarray(arr)
+
+    shape = property(lambda self: self.arr.shape)
+    dtype = property(lambda self: self.arr.dtype)
+    nbytes = property(lambda self: self.arr.nbytes)
+
+    def take(self, ids) -> np.ndarray:
+        """Row-granular gather: only the requested rows leave the host
+        store (O(len(ids) × D) bytes)."""
+        return self.arr[np.asarray(ids)]
+
+    def block(self, ids) -> np.ndarray:
+        """Contiguous-ish block stream for the scorer's item blocks
+        (same gather semantics as ``take``; kept separate for intent)."""
+        return self.arr[np.asarray(ids)]
+
+
+class TieredExecutor:
+    """Drives one Plan's placements on the current backend."""
+
+    def __init__(self, plan: Plan, prefixes: tuple[str, ...] = ("params",
+                                                                "opt")):
+        self.plan = plan
+        self.topology = plan.topology
+        self.prefixes = prefixes
+        # host-store leaves currently demoted (by profile name)
+        self._host_names: set[str] = set()
+
+    # ------------------------------------------------------------ queries
+    def _demoted_tier(self, name: str):
+        pl = self.plan.placements.get(name)
+        if pl is None or pl.tier == self.topology.fast.name:
+            return None
+        return self.topology.tier(pl.tier)
+
+    @property
+    def has_demotions(self) -> bool:
+        return any(not self.plan.is_fast(n) for n in self.plan.placements)
+
+    def _walk(self, state, leaf_fn):
+        out = {}
+        for prefix in self.prefixes:
+            tree = state[prefix]
+            flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+            leaves = [leaf_fn(prefix + jax.tree_util.keystr(kp), leaf)
+                      for kp, leaf in flat]
+            out[prefix] = jax.tree_util.tree_unflatten(treedef, leaves)
+        for k in state:
+            if k not in out:
+                out[k] = state[k]
+        return out
+
+    # ------------------------------------------------------------ placement
+    def place(self, state) -> tuple[object, int]:
+        """Move every demoted state leaf onto its planned tier: the
+        tier's memory kind when the backend has it, the host store
+        otherwise.  Returns (state, n_offloaded)."""
+        self._host_names.clear()
+        moved = 0
+
+        def place_leaf(name, leaf):
+            nonlocal moved
+            tier = self._demoted_tier(name)
+            if tier is None:
+                return leaf
+            sh = memory_kind_sharding(tier.memory_kind)
+            moved += 1
+            if sh is not None:
+                return jax.device_put(leaf, sh)
+            self._host_names.add(name)
+            return np.asarray(leaf)
+
+        out = self._walk(state, place_leaf)
+        return out, moved
+
+    # ------------------------------------------------------------ streaming
+    def fetch(self, state):
+        """Demoted host-store leaves -> device (async H2D dispatch; the
+        returned state is the only reference holder, so the previous
+        step's copies free as soon as its state is dropped).  Identity
+        when nothing is in the host store (memory-kind path, or no
+        demotions)."""
+        if not self._host_names:
+            return state
+        return self._walk(
+            state, lambda name, leaf:
+            jax.device_put(leaf) if name in self._host_names else leaf)
+
+    def commit(self, state):
+        """Write demoted leaves' updated bytes back to the host store
+        (the slow tier owns them between steps).  Identity when nothing
+        is host-resident."""
+        if not self._host_names:
+            return state
+        return self._walk(
+            state, lambda name, leaf:
+            np.asarray(leaf) if name in self._host_names else leaf)
+
+    # ------------------------------------------------------------ serving
+    def host_table(self, name: str, table):
+        """Wrap a demoted table in the row-granular serving facade when
+        it belongs to the host store; device_put it when its tier has a
+        real memory kind; pass through otherwise."""
+        tier = self._demoted_tier(name)
+        if tier is None:
+            return table
+        sh = memory_kind_sharding(tier.memory_kind)
+        if sh is not None:
+            return jax.device_put(table, sh)
+        return HostResident(table)
+
+    def describe(self) -> str:
+        demoted = self.plan.demoted()
+        mode = "memory-kind" if not self._host_names and demoted \
+            else "host-store"
+        return (f"TieredExecutor[{self.topology.name}] "
+                f"demoted={len(demoted)} ({mode})")

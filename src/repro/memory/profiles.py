@@ -1,0 +1,59 @@
+"""AccessProfile — the per-tensor traffic descriptor every placement
+policy consumes (paper §2.1's memory model, per tensor).
+
+Moved here from ``core.tiered_memory`` (which now re-exports these as a
+deprecation shim): the profile is topology-independent — bytes, reads
+and writes per step, and the access granularity of one touch — and the
+topology's cost model turns it into a per-tier step time.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class AccessProfile:
+    """Static per-step traffic descriptor for one tensor."""
+    name: str
+    nbytes: int
+    reads_per_step: float = 1.0     # full-tensor read equivalents
+    writes_per_step: float = 0.0    # full-tensor write equivalents
+    access_size: int = 512          # bytes per touch (embedding row, tile, ...)
+    pinned: str | None = None       # force a tier by name, or the
+    #                                 'fast'/'slow' ('hbm'/'host') aliases
+
+    def step_traffic(self) -> tuple[float, float]:
+        return (self.nbytes * self.reads_per_step,
+                self.nbytes * self.writes_per_step)
+
+
+# ---------------------------------------------------------------------------
+# Workload profile builders (used by configs and benchmarks)
+
+def gnn_recsys_profiles(n_users: int, n_items: int, n_edges: int,
+                        embed_dim: int, n_layers: int,
+                        dtype_bytes: int = 4) -> list[AccessProfile]:
+    """Paper §2.1 memory model: len(m)*|E| per layer for messages,
+    len(x)*|V| for embeddings, doubled for training (grads)."""
+    v = n_users + n_items
+    row = embed_dim * dtype_bytes
+    out = [
+        AccessProfile("embeddings", v * row, reads_per_step=2 * n_layers,
+                      writes_per_step=2.0, access_size=row),
+        AccessProfile("embed_grads", v * row, reads_per_step=1.0,
+                      writes_per_step=2 * n_layers, access_size=row),
+        AccessProfile("opt_state", 2 * v * row, reads_per_step=1.0,
+                      writes_per_step=1.0, access_size=row),
+        AccessProfile("graph_coo", 2 * n_edges * 8, reads_per_step=2 * n_layers,
+                      writes_per_step=0.0, access_size=8),
+    ]
+    for l in range(n_layers):
+        # SDDMM output: written once (streaming), read once by SpMM; and
+        # re-read/re-written in backward.
+        out.append(AccessProfile(f"messages_l{l}", n_edges * row,
+                                 reads_per_step=2.0, writes_per_step=2.0,
+                                 access_size=row))
+        out.append(AccessProfile(f"activations_l{l}", v * row,
+                                 reads_per_step=2.0, writes_per_step=2.0,
+                                 access_size=row))
+    return out

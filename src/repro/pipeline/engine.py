@@ -41,9 +41,9 @@ from repro.core.large_batch import LargeBatchSchedule
 from repro.data.loader import EdgeLoader
 from repro.data.synth import InteractionData
 from repro.dist.hints import sharding_hints
+from repro.memory import TieredExecutor, get_topology
 from repro.optim import adam, sgd
-from repro.pipeline.plan import (TrainPlan, apply_placements,
-                                 build_train_plan)
+from repro.pipeline.plan import TrainPlan, build_train_plan
 from repro.pipeline.registry import get_model
 from repro.pipeline.shard import ShardPlan
 from repro.pipeline.sparse import BipartiteCSR, default_impl
@@ -63,10 +63,18 @@ class PipelineConfig:
     warmup_epochs: int = 2
     lr_scaling: str = "linear"         # 'linear' | 'sqrt' (paper ablation)
     l2: float = 1e-4
-    hbm_budget: int | None = None      # planner budget override (bytes/device)
+    hbm_budget: int | None = None      # fast-tier budget override (bytes/device)
     impl: str | None = None            # kernel dispatch override; 'ring'
     #                                    forces the sharded aggregation route
     seed: int = 0
+    # memory-tier subsystem (repro.memory): which registered topology
+    # the run models, which placement policy assigns tensors to tiers,
+    # per-tier capacity overrides, and name->tier pins.  The defaults
+    # reproduce the pre-redesign planner bit for bit.
+    memory_topology: str = "tpu-hbm-host"
+    memory_policy: str = "greedy"
+    memory_capacity: dict | None = None   # tier name -> bytes
+    memory_pins: dict | None = None       # tensor (sub)name -> tier name
     # sharded execution (pipeline.shard.ShardPlan); the defaults are the
     # inert single-device plan — bit-identical to the unsharded pipeline
     mesh_shape: tuple[int, ...] = (1,)
@@ -109,11 +117,17 @@ class Pipeline:
                                    target_batch=cfg.target_batch,
                                    warmup_epochs=cfg.warmup_epochs,
                                    scaling=cfg.lr_scaling)
+        self.topology = get_topology(cfg.memory_topology) \
+            .with_capacity(cfg.memory_capacity or {})
         self.plan = build_train_plan(cfg.arch, self.spec, params, opt_state,
                                      self.g, cfg.n_layers, cfg.embed_dim,
                                      sched, impl, hbm_budget=cfg.hbm_budget,
                                      microbatch=cfg.microbatch,
-                                     shard=self.shard)
+                                     shard=self.shard,
+                                     topology=self.topology,
+                                     policy=cfg.memory_policy,
+                                     pins=cfg.memory_pins)
+        self.executor = TieredExecutor(self.plan.plan)
         self._state0 = self.apply_plan({"params": params, "opt": opt_state})
 
         # the loader iterates at GLOBAL microbatch granularity: one
@@ -156,7 +170,13 @@ class Pipeline:
     def apply_plan(self, state):
         """Place every state leaf onto its planned memory tier (used on
         fresh state, after re-layout, and on checkpoint restore — raw
-        restored leaves otherwise land back in HBM).
+        restored leaves otherwise land back in the fast tier).
+
+        The ``TieredExecutor`` makes the demotion real on every
+        backend: leaves go to their tier's JAX memory kind when the
+        backend has one (TPU), and into the executor's host byte store
+        otherwise — ``step_fn`` then streams them device-ward per step
+        (``fetch``) and writes updates back (``commit``).
 
         Sharded runs place onto the MESH instead: large tables
         row-sharded (the per-device capacity relief), small leaves
@@ -164,12 +184,12 @@ class Pipeline:
         mesh NamedSharding and a host-memory-kind placement are
         mutually exclusive device_puts, and silently doing one after
         the other would just undo the first — so ``n_offloaded`` stays
-        0 and the tier plan remains what it already is on CPU backends:
-        documented intent that drives the microbatch derivation."""
+        0 and the tier plan remains documented intent that drives the
+        per-device microbatch derivation."""
         if self.shard is not None and self.shard.is_sharded:
             self.n_offloaded = 0
             return self.shard.shard_state(state)
-        state, self.n_offloaded = apply_placements(state, self.plan.plan)
+        state, self.n_offloaded = self.executor.place(state)
         return state
 
     def step_context(self):
@@ -311,10 +331,15 @@ class Pipeline:
         epoch = self.current_epoch()
         k = self.plan.microbatches_for_epoch(epoch)
         users, pos, neg = self._next_target_batch(k, step)
+        # slow-tier leaves stream device-ward once per step (the tables
+        # don't change inside one accumulated batch) through the
+        # executor's double buffer, and the updated bytes stream back
+        # afterwards — identity when nothing is demoted off-device.
+        state = self.executor.fetch(state)
         loss, grads = self.grads_for_batch(state["params"], users, pos, neg)
         lr = jnp.float32(self.lr_for_epoch(epoch))
         self._next_step = step + 1
-        return self._apply_update(state, grads, lr), loss
+        return self.executor.commit(self._apply_update(state, grads, lr)), loss
 
     def on_relayout(self, state):
         """Loop straggler escalation: re-run the planner over the current
@@ -327,7 +352,9 @@ class Pipeline:
             cfg.arch, self.spec, state["params"], state["opt"], self.g,
             cfg.n_layers, cfg.embed_dim, self.sched, self.plan.impl,
             hbm_budget=cfg.hbm_budget, microbatch=self.plan.microbatch,
-            shard=self.shard)
+            shard=self.shard, topology=self.topology,
+            policy=cfg.memory_policy, pins=cfg.memory_pins)
+        self.executor = TieredExecutor(self.plan.plan)
         return self.apply_plan(state)
 
     # ---------------------------------------------------------------- eval

@@ -1,13 +1,17 @@
 """TrainPlan — the placement + batching contract of one training run.
 
 This is where the paper's two headline knobs stop being independent:
-the TieredMemoryPlanner decides which tensors keep HBM residency, and
-whatever HBM is left over bounds the *microbatch*; the 150K-sample
-target batches of §7.1 then run as ``ceil(B/microbatch)`` accumulated
-microbatches.  ``build_train_plan`` profiles the **actual** tensor set
-of the model (every params/optimizer leaf by its real nbytes, the CSR
-adjacency, and — only for models that materialize them — the per-layer
-edge-message matrices), runs the planner, and derives the microbatch.
+the placement policy decides which tensors keep fast-tier residency,
+and whatever fast-tier capacity is left over bounds the *microbatch*;
+the 150K-sample target batches of §7.1 then run as
+``ceil(B/microbatch)`` accumulated microbatches.  ``build_train_plan``
+profiles the **actual** tensor set of the model (every params/optimizer
+leaf by its real nbytes, the CSR adjacency, and — only for models that
+materialize them — the per-layer edge-message matrices), runs the
+selected ``repro.memory`` placement policy over the selected
+``TierTopology``, and derives the microbatch.  Budgets are per-tier and
+— under a ``ShardPlan`` — per-shard: profiles describe per-device
+tensor shards and every mesh device gets its own tier plan.
 """
 from __future__ import annotations
 
@@ -18,8 +22,8 @@ import jax
 import numpy as np
 
 from repro.core.large_batch import LargeBatchSchedule
-from repro.core.tiered_memory import (AccessProfile, HBM_CAPACITY, Plan,
-                                      plan_placement)
+from repro.memory import (AccessProfile, Plan, TieredExecutor, get_policy,
+                          get_topology, memory_kind_sharding)
 from repro.pipeline.registry import ModelSpec
 from repro.pipeline.shard import ShardPlan
 from repro.pipeline.sparse import BipartiteCSR
@@ -133,18 +137,29 @@ class TrainPlan:
     ``shards`` mesh devices runs that many samples per accumulation
     chunk, so the global batch is ``shards x microbatch x accum``
     (``global_microbatch`` per chunk).  Single-device runs have
-    ``shards == 1`` and the two coincide."""
+    ``shards == 1`` and the two coincide.  ``hbm_budget`` is the
+    fast-tier budget (per device); the full per-tier budgets live on
+    ``plan.budgets``."""
     arch: str
     plan: Plan                     # tier placement over the tensor set
     sched: LargeBatchSchedule
     microbatch: int                # per-shard
     impl: str                      # kernel dispatch ('pallas' | 'xla')
-    hbm_budget: int                # per-device
+    hbm_budget: int                # fast-tier budget, per-device
     shards: int = 1                # mesh size P
 
     @property
     def global_microbatch(self) -> int:
         return self.microbatch * self.shards
+
+    @property
+    def topology(self):
+        return self.plan.topology
+
+    @property
+    def write_policy(self) -> dict[str, str]:
+        """Per-kernel §6 write-policy table, emitted from the plan."""
+        return self.plan.write_policy()
 
     def microbatches_for_epoch(self, epoch: int) -> int:
         return max(1, math.ceil(self.sched.batch_for_epoch(epoch)
@@ -155,16 +170,21 @@ class TrainPlan:
         for name, p in self.plan.placements.items():
             tiers.setdefault(p.tier, []).append(name)
         shard_txt = f" shards={self.shards}" if self.shards > 1 else ""
+        fast = self.topology.fast.name
         lines = [f"TrainPlan[{self.arch}] impl={self.impl}{shard_txt} "
                  f"microbatch={self.microbatch} "
                  f"target_batch={self.sched.target_batch} "
-                 f"hbm={self.plan.hbm_used/2**20:.1f}/"
+                 f"topology={self.topology.name} policy={self.plan.policy} "
+                 f"{fast}={self.plan.hbm_used/2**20:.1f}/"
                  f"{self.hbm_budget/2**20:.1f} MiB "
                  f"est_penalty={self.plan.est_step_penalty_s*1e3:.2f} ms/step"]
-        for tier in ("hbm", "host"):
+        for tier in self.topology.names:
             names = tiers.get(tier, [])
             if names:
                 lines.append(f"  {tier}: {', '.join(sorted(names))}")
+        wp = self.write_policy
+        lines.append("  write_policy: "
+                     + " ".join(f"{k}={wp[k]}" for k in sorted(wp)))
         return "\n".join(lines)
 
 
@@ -173,14 +193,25 @@ def build_train_plan(arch: str, spec: ModelSpec, params, opt_state,
                      sched: LargeBatchSchedule, impl: str,
                      hbm_budget: int | None = None,
                      microbatch: int | None = None,
-                     shard: ShardPlan | None = None) -> TrainPlan:
-    """Profile -> place -> derive the microbatch.  ``hbm_budget`` is
-    *per device*; with a ``ShardPlan`` the profiles describe per-device
-    shards and the derived microbatch is the per-shard one."""
-    budget = int(hbm_budget) if hbm_budget is not None else HBM_CAPACITY
+                     shard: ShardPlan | None = None,
+                     topology: "str | object" = "tpu-hbm-host",
+                     policy: str = "greedy",
+                     pins: dict | None = None) -> TrainPlan:
+    """Profile -> place -> derive the microbatch.  ``topology`` names a
+    registered ``TierTopology`` (or is one); ``policy`` names a
+    registered placement policy; ``pins`` force tensors onto tiers by
+    (sub)name.  ``hbm_budget`` overrides the fast tier's capacity and
+    all budgets are *per device*: with a ``ShardPlan`` the profiles
+    describe per-device shards and the derived microbatch is the
+    per-shard one."""
+    topo = get_topology(topology)
+    budgets = topo.capacities()
+    if hbm_budget is not None:
+        budgets[topo.fast.name] = int(hbm_budget)
+    budget = budgets[topo.fast.name]
     profs = profiles_from_state(params, opt_state, g, n_layers, spec,
                                 embed_dim, shard=shard)
-    plan = plan_placement(profs, hbm_budget=budget)
+    plan = get_policy(policy)(profs, topo, budgets=budgets, pins=pins)
     shards = shard.n_shards if shard is not None else 1
     if microbatch is None:
         microbatch = derive_microbatch(budget - plan.hbm_used,
@@ -193,42 +224,14 @@ def build_train_plan(arch: str, spec: ModelSpec, params, opt_state,
 # ---------------------------------------------------------------- placement
 def host_offload_sharding():
     """A sharding that pins to the host memory tier, when the backend has
-    one (TPU); None on backends without memory kinds (CPU tests)."""
-    try:
-        dev = jax.devices()[0]
-        kinds = {m.kind for m in dev.addressable_memories()}
-        if "pinned_host" not in kinds:
-            return None
-        return jax.sharding.SingleDeviceSharding(dev,
-                                                 memory_kind="pinned_host")
-    except Exception:  # noqa: BLE001 — backends without memories API
-        return None
+    one (TPU); None on backends without memory kinds (CPU tests).
+    Legacy wrapper over ``repro.memory.memory_kind_sharding``."""
+    return memory_kind_sharding("pinned_host")
 
 
 def apply_placements(state, plan: Plan) -> tuple[object, int]:
-    """device_put every state leaf onto its planned tier.  Returns
-    (state, n_offloaded).  No-op (0 offloaded) when the backend has no
-    host memory kind — the plan still documents intent and drives the
-    microbatch, which is what the CPU CI exercises."""
-    host = host_offload_sharding()
-    if host is None:
-        return state, 0
-
-    moved = 0
-
-    def place(prefix, tree):
-        nonlocal moved
-        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-        leaves = []
-        for kp, leaf in flat:
-            name = prefix + jax.tree_util.keystr(kp)
-            pl = plan.placements.get(name)
-            if pl is not None and pl.tier == "host":
-                leaf = jax.device_put(leaf, host)
-                moved += 1
-            leaves.append(leaf)
-        return jax.tree_util.tree_unflatten(treedef, leaves)
-
-    out = {"params": place("params", state["params"]),
-           "opt": place("opt", state["opt"])}
-    return out, moved
+    """Place every state leaf onto its planned tier.  Returns
+    (state, n_offloaded).  Legacy wrapper: the engine now drives a
+    ``repro.memory.TieredExecutor`` directly, which also gives
+    backends without memory kinds a real (host-store) slow tier."""
+    return TieredExecutor(plan).place(state)

@@ -1,9 +1,11 @@
-"""The seed-baseline delta reporter behind ``make test``."""
+"""The seed-baseline delta reporter and the placement-plan snapshot
+gate behind ``make test``."""
 import json
 import pathlib
 import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).parents[1] / "tools"))
+from check_plan_snapshot import SNAPSHOT_PATH, build_snapshots  # noqa: E402
 from check_test_delta import BASELINE_PATH, parse_summary  # noqa: E402
 
 
@@ -21,3 +23,20 @@ def test_parse_summary_variants():
 def test_baseline_records_seed_outcome():
     baseline = json.loads(BASELINE_PATH.read_text())
     assert baseline["passed"] == 113 and baseline["skipped"] == 1
+
+
+def test_plan_snapshots_match_golden():
+    """The committed golden plan snapshots must equal a fresh derivation
+    for every registered topology (the same gate `make test`/CI runs —
+    placement drift fails like a test-count regression)."""
+    got = build_snapshots()
+    want = json.loads(SNAPSHOT_PATH.read_text())
+    assert set(got) == set(want)
+    for topo in got:
+        assert got[topo] == want[topo], f"plan drifted for {topo!r}"
+
+
+def test_plan_snapshots_cover_all_topologies():
+    from repro.memory import topology_names
+    want = json.loads(SNAPSHOT_PATH.read_text())
+    assert set(topology_names()) <= set(want)

@@ -1,0 +1,110 @@
+#!/usr/bin/env python
+"""Golden-snapshot gate for placement plans.
+
+Builds the paper-scale placement plan (the ``lightgcn-full`` preset's
+§2.1 profile set, greedy policy, 30%-of-footprint fast-tier budget)
+under EVERY registered ``TierTopology`` preset and compares the result
+— tensor→tier assignments, per-tier usage, estimated step penalty, and
+the plan-emitted write-policy table — against the committed golden JSON
+(``tools/plan_snapshots.json``).
+
+A placement regression (a tensor silently changing tiers, a penalty
+shifting, a new topology preset without a snapshot) fails ``make test``
+and CI the same way a test-count regression does.
+
+    python tools/check_plan_snapshot.py            # compare (CI gate)
+    python tools/check_plan_snapshot.py --update   # regenerate golden
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parents[1] / "src"))
+
+SNAPSHOT_PATH = pathlib.Path(__file__).with_name("plan_snapshots.json")
+
+
+def build_snapshots() -> dict:
+    from repro.api import get_preset
+    from repro.memory import (get_policy, get_topology, gnn_recsys_profiles,
+                              topology_names)
+    spec = get_preset("lightgcn-full")
+    profiles = gnn_recsys_profiles(
+        spec.data.n_users, spec.data.n_items, spec.data.edges,
+        spec.model.embed_dim, spec.model.n_layers)
+    total = sum(p.nbytes for p in profiles)
+    out = {"_profile": {
+        "preset": "lightgcn-full",
+        "n_tensors": len(profiles),
+        "total_bytes": int(total),
+        "fast_budget_fraction": 0.3,
+    }}
+    for name in topology_names():
+        topo = get_topology(name)
+        budgets = {topo.fast.name: int(total * 0.3),
+                   topo.slow.name: max(topo.slow.capacity, total)}
+        plan = get_policy("greedy")(profiles, topo, budgets=budgets)
+        out[name] = plan.to_dict()
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the golden snapshot file")
+    args = ap.parse_args()
+    got = build_snapshots()
+    if args.update:
+        SNAPSHOT_PATH.write_text(json.dumps(got, indent=2, sort_keys=True)
+                                 + "\n")
+        print(f"wrote {SNAPSHOT_PATH} ({len(got) - 1} topologies)")
+        return 0
+    if not SNAPSHOT_PATH.exists():
+        print(f"FAIL: no golden snapshot at {SNAPSHOT_PATH}; run "
+              f"`python {sys.argv[0]} --update` and commit the result")
+        return 1
+    want = json.loads(SNAPSHOT_PATH.read_text())
+    failures = []
+    for topo in sorted(set(got) | set(want)):
+        if topo not in want:
+            failures.append(f"topology {topo!r} has no golden snapshot "
+                            "(new preset? run --update)")
+            continue
+        if topo not in got:
+            failures.append(f"golden topology {topo!r} is no longer "
+                            "registered")
+            continue
+        if got[topo] != want[topo]:
+            diffs = _diff(want[topo], got[topo])
+            failures.append(f"topology {topo!r} drifted: " + "; ".join(diffs))
+    if failures:
+        print("--- placement-plan snapshot check: FAIL ---")
+        for f in failures:
+            print(f"  {f}")
+        print("(intentional change? rerun with --update and commit)")
+        return 1
+    print(f"placement-plan snapshots OK ({len(got) - 1} topologies, "
+          f"{got['_profile']['n_tensors']} tensors)")
+    return 0
+
+
+def _diff(want, got, prefix="") -> list[str]:
+    if not isinstance(want, dict) or not isinstance(got, dict):
+        return [f"{prefix or 'value'}: {want!r} -> {got!r}"]
+    out = []
+    for k in sorted(set(want) | set(got)):
+        path = f"{prefix}.{k}" if prefix else str(k)
+        if k not in want:
+            out.append(f"{path}: (new) {got[k]!r}")
+        elif k not in got:
+            out.append(f"{path}: (gone, was {want[k]!r})")
+        elif want[k] != got[k]:
+            out.extend(_diff(want[k], got[k], path))
+    return out
+
+
+if __name__ == "__main__":
+    sys.exit(main())
