@@ -1,6 +1,9 @@
-"""Shared benchmark helpers: timing, CSV emission, standard test graphs."""
+"""Shared benchmark helpers: timing, CSV emission, JSON artifacts,
+standard test graphs."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -12,10 +15,33 @@ from repro.data import synth
 
 ROWS: list[tuple] = []
 
+BENCH_DIR = os.environ.get("BENCH_DIR", "results")
+
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_bench_json(name: str, section: str, payload: dict) -> str:
+    """Merge ``payload`` under ``section`` into ``results/BENCH_<name>.json``.
+
+    Versioned perf artifacts (``BENCH_*.json``, see ROADMAP) accumulate
+    sections from the modules that produce them, so two benchmarks can
+    contribute to the same file without clobbering each other.
+    """
+    path = os.path.join(BENCH_DIR, f"BENCH_{name}.json")
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data[section] = payload
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path} [{section}]")
+    return path
 
 
 def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:

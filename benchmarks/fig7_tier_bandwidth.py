@@ -10,16 +10,22 @@ plus a measured CPU-cache proxy for the access-size effect.
 ``--topology`` selects the preset (default ``tpu-hbm-host``); run
 ``python -m benchmarks.run --only fig7 --topology dram-optane-appdirect``
 or this module directly.
+
+``--compression int8`` adds the quantized-storage arm: the slow-tier
+byte terms rescaled by ``CompressionCfg.embed_store="int8"`` pricing
+(per-row int8 + fp32 scale, ~4x capacity / ~4x effective gather
+bandwidth) plus a measured exact-vs-int8-vs-topk smoke train-step
+timing, all recorded to ``results/BENCH_compression.json``.
 """
 import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 from repro.memory import get_topology
 
 
-def run(topology: str = "tpu-hbm-host"):
+def run(topology: str = "tpu-hbm-host", compression: str = "none"):
     topo = get_topology(topology)
     fast, slow = topo.fast, topo.slow
     for t in topo.tiers:
@@ -59,7 +65,65 @@ def run(topology: str = "tpu-hbm-host"):
     emit("fig7/host_seq_read_GBs_measured", 0.0, f"{seq/1e9:.2f}")
     emit("fig7/host_rand4B_read_GBs_measured", 0.0,
          f"{rand/1e9:.2f} ({rand/seq*100:.0f}% of sequential)")
+    if compression != "none":
+        _compression_arm(topo)
     return {}
+
+
+def _compression_arm(topo):
+    """Quantized-storage byte terms + measured per-scheme step times,
+    recorded to ``results/BENCH_compression.json``."""
+    from repro.api import build, get_preset
+    from repro.memory import quantized_table_bytes
+    from repro.optim.compression import wire_bytes
+
+    slow = topo.slow
+    full = get_preset("lightgcn-full")
+    n_rows = full.data.n_users + full.data.n_items
+    row_bytes = full.model.embed_dim * 4
+    fp32_bytes = n_rows * row_bytes
+    int8_bytes = quantized_table_bytes(n_rows, row_bytes)
+    ratio = int8_bytes / fp32_bytes
+    emit(f"fig7/{topo.name}/embed_table_fp32_GiB", 0.0,
+         f"{fp32_bytes/2**30:.2f}")
+    emit(f"fig7/{topo.name}/embed_table_int8_GiB", 0.0,
+         f"{int8_bytes/2**30:.2f} ({1/ratio:.2f}x capacity)")
+    # the gather moves store_bytes off the slow tier: same tier
+    # bandwidth, ~1/4 the bytes -> ~4x effective row-fetch rate
+    gather = row_bytes / slow.read_bw / slow.utilization(row_bytes)
+    emit(f"fig7/{topo.name}/slow_row_gather_us_fp32", gather * 1e6,
+         f"{row_bytes}B row")
+    emit(f"fig7/{topo.name}/slow_row_gather_us_int8", gather * ratio * 1e6,
+         f"{int(row_bytes*ratio)}B stored row")
+
+    # measured: smoke train-step wall time per gradient scheme (the
+    # single-device compressor emulates the P-share exchange, so this
+    # prices the compression compute itself, not the saved wire time)
+    schemes = ("none", "int8", "topk")
+    n_grads = n_rows * full.model.embed_dim
+    steps, times = 6, {}
+    for scheme in schemes:
+        run_h = build(get_preset("lightgcn-smoke").override({
+            "loop.steps": steps, "plan.target_batch": 64,
+            "plan.microbatch": 16, "plan.warmup_epochs": 0,
+            "data.edges": 1200, "loop.ckpt_dir": None,
+            "compression.grads": scheme}))
+        run_h.step()                                   # compile
+        t0 = time.perf_counter()
+        for _ in range(steps - 1):
+            run_h.step()
+        times[scheme] = (time.perf_counter() - t0) / (steps - 1)
+        emit(f"fig7/compression/{scheme}_step_us", times[scheme] * 1e6,
+             f"wire={wire_bytes(n_grads, scheme)}B/step (full-scale grads)")
+    write_bench_json("compression", "tier_storage", {
+        "topology": topo.name,
+        "embed_table_bytes": {"fp32": fp32_bytes, "int8": int8_bytes},
+        "capacity_multiplier": 1 / ratio,
+        "slow_row_gather_s": {"fp32": gather, "int8": gather * ratio},
+        "grad_wire_bytes_per_step": {
+            s: wire_bytes(n_grads, s) for s in schemes},
+        "smoke_step_s": times,
+    })
 
 
 if __name__ == "__main__":
@@ -70,4 +134,9 @@ if __name__ == "__main__":
     ap.add_argument("--topology", default="tpu-hbm-host",
                     choices=topology_names(),
                     help="registered TierTopology preset to print")
-    run(ap.parse_args().topology)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "int8"],
+                    help="add the quantized-storage arm and record "
+                         "results/BENCH_compression.json")
+    a = ap.parse_args()
+    run(a.topology, compression=a.compression)

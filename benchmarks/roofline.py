@@ -3,6 +3,11 @@
 Reads results/dryrun/*.json (produced by `python -m repro.launch.dryrun
 --all`) and prints the three roofline terms, dominant bottleneck, MFU at
 the roofline bound, and the model-FLOPs/HLO-FLOPs useful ratio.
+
+Each cell also gets compressed-collective arms: the collective term
+rescaled by ``CompressionCfg.grads`` wire pricing (int8: ~1/4 bytes,
+topk: ~2*frac bytes), with the re-derived bottleneck and bound-MFU,
+recorded to ``results/BENCH_compression.json``.
 """
 from __future__ import annotations
 
@@ -10,7 +15,8 @@ import glob
 import json
 import os
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
+from repro.optim.compression import wire_bytes
 
 DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
 
@@ -46,4 +52,33 @@ def run():
     n_fit = sum(1 for _, _, r in rows.values() if r["fits_hbm"])
     emit("roofline/cells_total", 0.0, str(len(rows)))
     emit("roofline/cells_fit_hbm", 0.0, str(n_fit))
+
+    # compressed-collective arms: the gradient exchange moves
+    # wire_bytes(n)/4n of the fp32 bytes, the other two terms stand
+    wire = {s: wire_bytes(10 ** 6, s) / (4 * 10 ** 6)
+            for s in ("int8", "topk")}
+    comp_cells = {}
+    for cell, (roof, _, r) in rows.items():
+        arms = {"none": {"collective_s": roof["collective_s"],
+                         "bound_s": max(roof["compute_s"],
+                                        roof["memory_s"],
+                                        roof["collective_s"]),
+                         "bottleneck": roof["bottleneck"]}}
+        for scheme, ratio in wire.items():
+            coll = roof["collective_s"] * ratio
+            bound_s = max(roof["compute_s"], roof["memory_s"], coll)
+            bottleneck = max(
+                [("compute", roof["compute_s"]),
+                 ("memory", roof["memory_s"]), ("collective", coll)],
+                key=lambda kv: kv[1])[0]
+            mfu = roof["model_flops"] / (bound_s * r["chips"] * 197e12
+                                         + 1e-30)
+            arms[scheme] = {"collective_s": coll, "bound_s": bound_s,
+                            "bottleneck": bottleneck}
+            emit(f"roofline/{cell}@{scheme}", 0.0,
+                 f"coll={coll:.4f}s bound={bottleneck} "
+                 f"mfu_bound={mfu*100:.1f}% (wire x{ratio:.3f})")
+        comp_cells[cell] = arms
+    write_bench_json("compression", "roofline_wire", {
+        "wire_byte_ratio": wire, "cells": comp_cells})
     return rows

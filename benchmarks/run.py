@@ -37,6 +37,10 @@ def main() -> None:
                     help="registered TierTopology preset forwarded to "
                          "benchmarks that take one (fig7, fig8, fig10), "
                          "e.g. dram-optane-appdirect")
+    ap.add_argument("--compression", type=str, default=None,
+                    help="compression scheme ('int8') forwarded to "
+                         "benchmarks that take one (fig7's quantized-"
+                         "storage arm; records BENCH_compression.json)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else ALL
     failures = []
@@ -52,6 +56,8 @@ def main() -> None:
                 kw["mesh"] = args.mesh
             if args.topology is not None and "topology" in params:
                 kw["topology"] = args.topology
+            if args.compression is not None and "compression" in params:
+                kw["compression"] = args.compression
             mod.run(**kw)
         except Exception:  # noqa: BLE001
             traceback.print_exc()

@@ -6,8 +6,9 @@ drives the whole stack: ``build(spec)`` returns a ``Run`` exposing
 ``recommend()`` (planner-placed serving facade), and ``resume()``.
 
   Experiment  — preset / dict / JSON-file constructors + overrides;
-  ExperimentSpec, ModelCfg, DataCfg, PlanCfg, LoopCfg, EvalCfg — the
-      typed, serializable sections;
+  ExperimentSpec, ModelCfg, DataCfg, PlanCfg, MeshCfg, MemoryCfg,
+      CompressionCfg, LoopCfg, EvalCfg — the typed, serializable
+      sections;
   build / Run — spec -> live handle;
   get_preset / register_preset / preset_names — the preset registry
       (absorbs repro.configs FULL/SMOKE for the GNNRecSys family);
@@ -17,12 +18,14 @@ from repro.api.data import (DATA_SOURCES, load_data, register_data_source)
 from repro.api.experiment import Experiment
 from repro.api.presets import get_preset, preset_names, register_preset
 from repro.api.run import Run, build
-from repro.api.spec import (DataCfg, EvalCfg, ExperimentSpec, LoopCfg,
-                            MemoryCfg, MeshCfg, ModelCfg, PlanCfg)
+from repro.api.spec import (CompressionCfg, DataCfg, EvalCfg,
+                            ExperimentSpec, LoopCfg, MemoryCfg, MeshCfg,
+                            ModelCfg, PlanCfg)
 
 __all__ = [
     "Experiment", "ExperimentSpec", "ModelCfg", "DataCfg", "PlanCfg",
-    "MeshCfg", "MemoryCfg", "LoopCfg", "EvalCfg", "Run", "build",
+    "MeshCfg", "MemoryCfg", "CompressionCfg", "LoopCfg", "EvalCfg",
+    "Run", "build",
     "get_preset", "register_preset", "preset_names", "load_data",
     "register_data_source", "DATA_SOURCES",
 ]

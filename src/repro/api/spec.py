@@ -4,9 +4,9 @@ The paper's thesis (§5-§7) is that batch size, tensor placement, and
 model depth must be co-tuned; before this module those knobs lived on
 three disconnected surfaces (``repro.configs`` registry entries,
 ``PipelineConfig``/``LoopConfig`` dataclasses, ad-hoc argparse flags).
-``ExperimentSpec`` is the single source of truth: seven typed sections
-(model / data / plan / mesh / memory / loop / eval) plus the training
-hyperparameters,
+``ExperimentSpec`` is the single source of truth: eight typed sections
+(model / data / plan / mesh / memory / compression / loop / eval) plus
+the training hyperparameters,
 with an exact ``to_dict``/``from_dict``/JSON round-trip and dotted-path
 overrides so a CLI flag, a preset, and a spec file all converge on the
 same object.  ``repro.api.build(spec)`` turns it into a ``Run``.
@@ -102,6 +102,40 @@ class MemoryCfg:
 
 
 @dataclasses.dataclass(frozen=True)
+class CompressionCfg:
+    """Byte compression on the slow links (``repro.optim.compression``):
+    the gradient combine (``grads``: int8 stochastic psum or top-k
+    all-gather, with per-participant error feedback carried in
+    ``state["comp"]``), capacity-tier embedding-table storage
+    (``embed_store='int8'``: ~1/4 bytes, fp32 dequant-on-gather, and
+    the planner prices the quantized footprint), and the ring-SpMM
+    payload rotation (``ring='int8'``).  The default is the identity:
+    no compressor is built and training stays bit-identical to the
+    pre-compression pipeline (pinned by tests/test_compression.py)."""
+    grads: str = "none"              # 'none' | 'int8' | 'topk'
+    frac: float = 0.01               # top-k kept fraction of each tensor
+    error_feedback: bool = True      # carry compression residuals
+    embed_store: str = "fp32"        # 'fp32' | 'int8' slow-tier tables
+    ring: str = "none"               # 'none' | 'int8' ring payload
+
+    def __post_init__(self):
+        if self.grads not in ("none", "int8", "topk"):
+            raise ValueError(f"compression.grads must be 'none', 'int8' "
+                             f"or 'topk', got {self.grads!r}")
+        if not 0.0 < float(self.frac) <= 1.0:
+            raise ValueError(f"compression.frac must be in (0, 1], "
+                             f"got {self.frac}")
+        if self.embed_store not in ("fp32", "int8"):
+            raise ValueError(f"compression.embed_store must be 'fp32' or "
+                             f"'int8', got {self.embed_store!r}")
+        if self.ring not in ("none", "int8"):
+            raise ValueError(f"compression.ring must be 'none' or 'int8', "
+                             f"got {self.ring!r}")
+        object.__setattr__(self, "frac", float(self.frac))
+        object.__setattr__(self, "error_feedback", bool(self.error_feedback))
+
+
+@dataclasses.dataclass(frozen=True)
 class LoopCfg:
     """Fault-tolerant-loop knobs consumed by ``runtime.loop``."""
     steps: int = 100
@@ -130,6 +164,8 @@ class ExperimentSpec:
     plan: PlanCfg = dataclasses.field(default_factory=PlanCfg)
     mesh: MeshCfg = dataclasses.field(default_factory=MeshCfg)
     memory: MemoryCfg = dataclasses.field(default_factory=MemoryCfg)
+    compression: CompressionCfg = dataclasses.field(
+        default_factory=CompressionCfg)
     loop: LoopCfg = dataclasses.field(default_factory=LoopCfg)
     eval: EvalCfg = dataclasses.field(default_factory=EvalCfg)
     optimizer: str = "adam"          # 'adam' | 'sgd'
@@ -194,13 +230,20 @@ class ExperimentSpec:
             memory_topology=self.memory.topology,
             memory_policy=self.memory.policy,
             memory_capacity=self.memory.capacity,
-            memory_pins=self.memory.pins, eval_k=self.eval.k,
+            memory_pins=self.memory.pins,
+            grad_compression=self.compression.grads,
+            compression_frac=self.compression.frac,
+            compression_ef=self.compression.error_feedback,
+            embed_store=self.compression.embed_store,
+            ring_compression=self.compression.ring,
+            eval_k=self.eval.k,
             eval_user_batch=self.eval.user_batch,
             eval_item_block=self.eval.item_block)
 
 
 _SECTIONS = {"model": ModelCfg, "data": DataCfg, "plan": PlanCfg,
-             "mesh": MeshCfg, "memory": MemoryCfg, "loop": LoopCfg,
+             "mesh": MeshCfg, "memory": MemoryCfg,
+             "compression": CompressionCfg, "loop": LoopCfg,
              "eval": EvalCfg}
 
 

@@ -125,7 +125,8 @@ def _bucket_edges_loop(src, dst, n_nodes: int, p: int, coeff=None,
 
 
 def make_ring_spmm(mesh, axis, n_local: int, with_coeff: bool = False,
-                   n_steps: int | None = None, relative_buckets: bool = True):
+                   n_steps: int | None = None, relative_buckets: bool = True,
+                   quantize: bool = False):
     """Build ring_spmm(x, src_l, dst_l, mask[, coeff]) -> A @ x over the
     flattened device ring of ``axis`` (one name or a tuple of names).
 
@@ -133,6 +134,19 @@ def make_ring_spmm(mesh, axis, n_local: int, with_coeff: bool = False,
     on their leading (dst-device) dim, as produced by ``bucket_edges``
     (which emits relative buckets — ``relative_buckets`` is accepted for
     signature stability and must stay True).
+
+    ``quantize=True`` rotates an int8 payload instead of the fp32 block
+    (``repro.api.CompressionCfg.ring``): each device quantizes its local
+    block ONCE (symmetric per-block int8, deterministic round-to-nearest
+    so forward and transpose rings see identical payloads) and the ring
+    permutes (q int8, scale fp32 scalar) — 1/4 the bytes per rotation.
+    The k=0 bucket still gathers from the exact local block, so local
+    edges (the majority under community-clustered node orderings, paper
+    Fig 11) see zero quantization error; only remote contributions pay
+    the bounded <= scale/2 per-element rounding.  Per-step error
+    feedback does not apply here — the payload is an *activation*
+    rotated once per call, with no next step to carry a residual into;
+    the gradient path's residuals live in ``pipeline.compress``.
     """
     if not relative_buckets:
         raise NotImplementedError("absolute bucket indexing was retired; "
@@ -150,24 +164,46 @@ def make_ring_spmm(mesh, axis, n_local: int, with_coeff: bool = False,
         if coeff is not None:
             coeff = coeff[0]
         perm = [(j, (j - 1) % p) for j in range(p)]
+        ax = axes if len(axes) > 1 else axes[0]
+
+        def gather(k, x_rot, bs, bm):
+            if quantize:
+                q_rot, s_rot = x_rot
+                deq = q_rot.astype(jnp.float32) * s_rot
+                # the local (k=0) bucket reads the exact resident block
+                xk = jnp.where(k == 0, x, deq)
+            else:
+                xk = x_rot
+            return jnp.where(bm[:, None], xk[bs], 0.0)
+
+        def rotate(x_rot):
+            if quantize:
+                q_rot, s_rot = x_rot
+                return (jax.lax.ppermute(q_rot, ax, perm),
+                        jax.lax.ppermute(s_rot, ax, perm))
+            return jax.lax.ppermute(x_rot, ax, perm)
 
         def body(k, carry):
             acc, x_rot = carry
             bs = jax.lax.dynamic_index_in_dim(src_l, k, 0, keepdims=False)
             bd = jax.lax.dynamic_index_in_dim(dst_l, k, 0, keepdims=False)
             bm = jax.lax.dynamic_index_in_dim(mask, k, 0, keepdims=False)
-            m = jnp.where(bm[:, None], x_rot[bs], 0.0)
+            m = gather(k, x_rot, bs, bm)
             if coeff is not None:
                 bc = jax.lax.dynamic_index_in_dim(coeff, k, 0, keepdims=False)
                 m = m * bc[:, None]
             acc = acc + jax.ops.segment_sum(m, bd, num_segments=n_local)
             # rotate: after this permute device i holds block (i+k+1)%p
-            x_rot = jax.lax.ppermute(x_rot, axes if len(axes) > 1 else axes[0],
-                                     perm)
-            return acc, x_rot
+            return acc, rotate(x_rot)
 
+        if quantize:
+            scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+            q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+            payload = (q, scale)
+        else:
+            payload = x
         acc = jnp.zeros((n_local, x.shape[-1]), x.dtype)
-        acc, _ = jax.lax.fori_loop(0, steps, body, (acc, x))
+        acc, _ = jax.lax.fori_loop(0, steps, body, (acc, payload))
         return acc
 
     xspec = P(axes if len(axes) > 1 else axes[0], None)

@@ -17,13 +17,15 @@ so demotion changes where bytes live and stream from, not just the
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 
 from repro.eval.topk import (DEFAULT_ITEM_BLOCK, DEFAULT_USER_BATCH,
                              streaming_topk)
 from repro.memory import HostResident, TieredExecutor, get_policy, \
-    get_topology
+    get_topology, quantized_table_bytes
 from repro.pipeline.plan import serving_profiles
 from repro.pipeline.sparse import default_impl
 
@@ -36,7 +38,7 @@ class Recommender:
                  item_block: int = DEFAULT_ITEM_BLOCK,
                  impl: str | None = None, hbm_budget: int | None = None,
                  topology: str = "tpu-hbm-host", policy: str = "greedy",
-                 pins: dict | None = None):
+                 pins: dict | None = None, embed_store: str = "fp32"):
         self.k = int(k)
         self.user_batch = int(user_batch)
         self.item_block = int(item_block)
@@ -54,9 +56,17 @@ class Recommender:
             budgets[topo.fast.name] = int(hbm_budget)
         row = int(item_e.shape[-1]) * item_e.dtype.itemsize
         profs = serving_profiles(user_e.nbytes, item_e.nbytes, row)
+        if embed_store == "int8":
+            # demoted tables live quantized (~1/4 bytes): price the
+            # placement on their stored footprint, serve via the
+            # dequant-on-gather facade below
+            profs = [dataclasses.replace(
+                p, store_bytes=quantized_table_bytes(
+                    int(p.nbytes // row), row)) for p in profs]
         self.plan = get_policy(policy)(profs, topo, budgets=budgets,
                                        pins=pins)
-        executor = TieredExecutor(self.plan, prefixes=())
+        executor = TieredExecutor(self.plan, prefixes=(),
+                                  embed_store=embed_store)
 
         def place_table(name, table):
             placed = executor.host_table(name, table)
@@ -85,6 +95,8 @@ class Recommender:
         kw.setdefault("policy", pipeline.cfg.memory_policy)
         kw.setdefault("hbm_budget", pipeline.cfg.hbm_budget)
         kw.setdefault("pins", pipeline.cfg.memory_pins)
+        kw.setdefault("embed_store",
+                      getattr(pipeline.cfg, "embed_store", "fp32"))
         return cls(user_e, item_e, seen_indptr=indptr, seen_items=items, **kw)
 
     def recommend(self, user_ids, k: int | None = None,

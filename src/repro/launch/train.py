@@ -106,6 +106,18 @@ def build_arg_parser() -> argparse.ArgumentParser:
                     help="pin a tensor (by profile name or substring) to a "
                          "tier, e.g. --pin item_embed=slow (repeatable; "
                          "merges into memory.pins)")
+    ap.add_argument("--compress-grads", choices=["none", "int8", "topk"],
+                    help="compressed gradient combine (compression.grads): "
+                         "int8 stochastic psum or top-k all-gather, with "
+                         "error feedback")
+    ap.add_argument("--compress-frac", type=float,
+                    help="top-k kept fraction (compression.frac)")
+    ap.add_argument("--embed-store", choices=["fp32", "int8"],
+                    help="capacity-tier embedding-table storage "
+                         "(compression.embed_store): int8 = ~1/4 bytes, "
+                         "fp32 dequant-on-gather")
+    ap.add_argument("--compress-ring", choices=["none", "int8"],
+                    help="ring-SpMM payload rotation (compression.ring)")
     return ap
 
 
@@ -161,6 +173,14 @@ def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
         ov["memory.topology"] = args.memory_topology
     if args.placement_policy is not None:
         ov["memory.policy"] = args.placement_policy
+    if args.compress_grads is not None:
+        ov["compression.grads"] = args.compress_grads
+    if args.compress_frac is not None:
+        ov["compression.frac"] = args.compress_frac
+    if args.embed_store is not None:
+        ov["compression.embed_store"] = args.embed_store
+    if args.compress_ring is not None:
+        ov["compression.ring"] = args.compress_ring
     if args.pin:
         pins = dict(spec.memory.pins or {})
         for entry in args.pin:

@@ -18,12 +18,13 @@ Three layers, replacing the hardcoded constants + advisory placement of
 The Experiment API surface is ``repro.api.MemoryCfg``; the planner
 entry is ``repro.pipeline.plan.build_train_plan``.
 """
-from repro.memory.executor import (HostResident, TieredExecutor,
-                                   memory_kind_sharding)
+from repro.memory.executor import (HostResident, QuantizedHostResident,
+                                   TieredExecutor, memory_kind_sharding)
 from repro.memory.policies import (Placement, PlacementPolicy, Plan,
                                    get_policy, place_exact, place_greedy,
                                    policy_names, register_policy)
-from repro.memory.profiles import AccessProfile, gnn_recsys_profiles
+from repro.memory.profiles import (AccessProfile, gnn_recsys_profiles,
+                                   quantized_table_bytes)
 from repro.memory.topology import (Tier, TierTopology, get_topology,
                                    register_topology, resolve_tier,
                                    topology_names)
@@ -31,8 +32,9 @@ from repro.memory.topology import (Tier, TierTopology, get_topology,
 __all__ = [
     "Tier", "TierTopology", "get_topology", "register_topology",
     "topology_names", "resolve_tier",
-    "AccessProfile", "gnn_recsys_profiles",
+    "AccessProfile", "gnn_recsys_profiles", "quantized_table_bytes",
     "Placement", "Plan", "PlacementPolicy", "get_policy",
     "register_policy", "policy_names", "place_greedy", "place_exact",
-    "TieredExecutor", "HostResident", "memory_kind_sharding",
+    "TieredExecutor", "HostResident", "QuantizedHostResident",
+    "memory_kind_sharding",
 ]

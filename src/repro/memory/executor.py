@@ -29,11 +29,23 @@ the all-fast run — on the ``uniform`` topology the cost model prices
 that demotion at exactly 0.0 and CPU CI pins the bit-identity
 (tests/test_memory.py).
 
+With ``embed_store='int8'`` (``repro.api.CompressionCfg``) demoted
+host-store embedding tables are held *quantized*: the store keeps
+per-row symmetric int8 values plus one fp32 scale per row (~1/4 the
+bytes — the capacity multiplier the planner prices via
+``AccessProfile.store_bytes``), and every fetch dequantizes on the way
+up.  The state's own leaf is the dequantized fp32 view, so checkpoints,
+eval snapshots and the jitted step see ordinary float32 arrays whose
+values have round-tripped through int8 (max abs error <= the row's
+quantization scale — pinned by tests/test_compression.py).
+
 ``HostResident`` is the row-granular serving facade: a slow-tier
 embedding table whose bytes live in the host store and whose rows are
 gathered/streamed on demand (``take``/``block``), so a query batch
 moves O(batch × D) bytes instead of the whole table —
 ``eval.topk.streaming_topk`` consumes it directly.
+``QuantizedHostResident`` is its int8 arm: rows live as (q, scale) and
+dequantize on gather.
 """
 from __future__ import annotations
 
@@ -41,6 +53,7 @@ import jax
 import numpy as np
 
 from repro.memory.policies import Plan
+from repro.optim.compression import dequantize_rows_int8, quantize_rows_int8
 
 
 def memory_kind_sharding(kind: str | None):
@@ -82,16 +95,49 @@ class HostResident:
         return self.arr[np.asarray(ids)]
 
 
+class QuantizedHostResident(HostResident):
+    """An int8-stored slow-tier table: the host store holds per-row
+    symmetric int8 values plus one fp32 scale per row (~1/4 the dense
+    bytes) and every gather dequantizes on the way to the device."""
+
+    def __init__(self, arr):
+        arr = np.asarray(arr, np.float32)
+        self.q, self.scale = quantize_rows_int8(arr)
+        self._shape = arr.shape
+
+    shape = property(lambda self: self._shape)
+    dtype = property(lambda self: np.dtype(np.float32))
+    nbytes = property(lambda self: self.q.nbytes + self.scale.nbytes)
+
+    def dense(self) -> np.ndarray:
+        """The full dequantized fp32 view (checkpoint/debug path)."""
+        return dequantize_rows_int8(self.q, self.scale)
+
+    def take(self, ids) -> np.ndarray:
+        ids = np.asarray(ids)
+        return dequantize_rows_int8(self.q[ids], self.scale[ids])
+
+    def block(self, ids) -> np.ndarray:
+        return self.take(ids)
+
+
 class TieredExecutor:
     """Drives one Plan's placements on the current backend."""
 
     def __init__(self, plan: Plan, prefixes: tuple[str, ...] = ("params",
-                                                                "opt")):
+                                                                "opt"),
+                 embed_store: str = "fp32"):
+        if embed_store not in ("fp32", "int8"):
+            raise ValueError(f"unknown embed_store {embed_store!r}; "
+                             "known: fp32, int8")
         self.plan = plan
         self.topology = plan.topology
         self.prefixes = prefixes
+        self.embed_store = embed_store
         # host-store leaves currently demoted (by profile name)
         self._host_names: set[str] = set()
+        # int8 buffers for quantized host-store tables: name -> (q, scale)
+        self._int8: dict[str, tuple[np.ndarray, np.ndarray]] = {}
 
     # ------------------------------------------------------------ queries
     def _demoted_tier(self, name: str):
@@ -117,12 +163,33 @@ class TieredExecutor:
                 out[k] = state[k]
         return out
 
+    def _wants_int8(self, name: str, leaf) -> bool:
+        """Embedding tables demoted to the host store are the quantized
+        arm: 2-D float32 ``params`` leaves (tables), when the executor
+        runs with ``embed_store='int8'``."""
+        return (self.embed_store == "int8"
+                and name.startswith("params")
+                and getattr(leaf, "ndim", 0) == 2
+                and getattr(leaf, "dtype", None) == np.float32)
+
+    def _store(self, name: str, leaf):
+        """Commit one host-store leaf: quantized tables keep (int8,
+        scale) buffers and the state carries the dequantized fp32 view;
+        everything else stores dense fp32 bytes."""
+        if self._wants_int8(name, leaf):
+            q, scale = quantize_rows_int8(np.asarray(leaf))
+            self._int8[name] = (q, scale)
+            return dequantize_rows_int8(q, scale)
+        self._int8.pop(name, None)
+        return np.asarray(leaf)
+
     # ------------------------------------------------------------ placement
     def place(self, state) -> tuple[object, int]:
         """Move every demoted state leaf onto its planned tier: the
         tier's memory kind when the backend has it, the host store
         otherwise.  Returns (state, n_offloaded)."""
         self._host_names.clear()
+        self._int8.clear()
         moved = 0
 
         def place_leaf(name, leaf):
@@ -135,7 +202,7 @@ class TieredExecutor:
             if sh is not None:
                 return jax.device_put(leaf, sh)
             self._host_names.add(name)
-            return np.asarray(leaf)
+            return self._store(name, leaf)
 
         out = self._walk(state, place_leaf)
         return out, moved
@@ -155,18 +222,20 @@ class TieredExecutor:
 
     def commit(self, state):
         """Write demoted leaves' updated bytes back to the host store
-        (the slow tier owns them between steps).  Identity when nothing
-        is host-resident."""
+        (the slow tier owns them between steps; quantized tables
+        re-quantize here, so the carried state is always the int8
+        round-trip).  Identity when nothing is host-resident."""
         if not self._host_names:
             return state
         return self._walk(
             state, lambda name, leaf:
-            np.asarray(leaf) if name in self._host_names else leaf)
+            self._store(name, leaf) if name in self._host_names else leaf)
 
     # ------------------------------------------------------------ serving
     def host_table(self, name: str, table):
         """Wrap a demoted table in the row-granular serving facade when
-        it belongs to the host store; device_put it when its tier has a
+        it belongs to the host store (the int8 dequant-on-gather facade
+        under ``embed_store='int8'``); device_put it when its tier has a
         real memory kind; pass through otherwise."""
         tier = self._demoted_tier(name)
         if tier is None:
@@ -174,11 +243,24 @@ class TieredExecutor:
         sh = memory_kind_sharding(tier.memory_kind)
         if sh is not None:
             return jax.device_put(table, sh)
+        if self.embed_store == "int8" and getattr(table, "ndim", 0) == 2:
+            return QuantizedHostResident(table)
         return HostResident(table)
+
+    def store_nbytes(self, name: str) -> int | None:
+        """Actual host-store bytes of a quantized table (q + scales), or
+        None when the leaf isn't int8-resident — what the planner's
+        ``store_bytes`` pricing should match."""
+        if name not in self._int8:
+            return None
+        q, scale = self._int8[name]
+        return q.nbytes + scale.nbytes
 
     def describe(self) -> str:
         demoted = self.plan.demoted()
         mode = "memory-kind" if not self._host_names and demoted \
             else "host-store"
+        store = f" embed_store=int8({len(self._int8)})" \
+            if self.embed_store == "int8" else ""
         return (f"TieredExecutor[{self.topology.name}] "
-                f"demoted={len(demoted)} ({mode})")
+                f"demoted={len(demoted)} ({mode}){store}")

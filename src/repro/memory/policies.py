@@ -122,6 +122,13 @@ class PlacementPolicy(Protocol):
 
 
 # ---------------------------------------------------------------- helpers
+def _bytes_on(p: AccessProfile, topology: TierTopology, tier: str) -> int:
+    """Resident bytes of ``p`` on ``tier``: quantized ``store_bytes``
+    off the fast tier (int8 capacity-tier tables at ~1/4 bytes), dense
+    ``nbytes`` on it — the quantity every budget/usage account uses."""
+    return p.bytes_on(tier == topology.fast.name)
+
+
 def _budgets(topology: TierTopology,
              overrides: Mapping[str, int] | None) -> dict[str, int]:
     out = topology.capacities()
@@ -167,7 +174,7 @@ def _place_pinned(profiles, topology, budgets, pins):
             continue
         pen = topology.demotion_penalty(p, tier)
         placements[p.name] = Placement(tier, pen, pinned=True)
-        used[tier] += p.nbytes
+        used[tier] += _bytes_on(p, topology, tier)
         pinned_penalty += pen
     fast = topology.fast.name
     if used[fast] > budgets[fast]:
@@ -206,10 +213,11 @@ def place_greedy(profiles, topology, *, budgets=None, pins=None,
         free, key=lambda p: -topology.demotion_penalty(p) / max(p.nbytes, 1))
     for p in ranked:
         for t in topology.tiers:
-            if used[t.name] + p.nbytes <= budgets[t.name]:
+            size = _bytes_on(p, topology, t.name)
+            if used[t.name] + size <= budgets[t.name]:
                 pen = topology.demotion_penalty(p, t)
                 placements[p.name] = Placement(t.name, pen)
-                used[t.name] += p.nbytes
+                used[t.name] += size
                 penalty += pen
                 break
         else:
@@ -260,7 +268,7 @@ def place_exact(profiles, topology, *, budgets=None, pins=None) -> Plan:
         else:
             pen = topology.demotion_penalty(p)
             placements[p.name] = Placement(slow, pen)
-            used[slow] += p.nbytes
+            used[slow] += _bytes_on(p, topology, slow)
             penalty += pen
     return Plan(placements, used, budgets, penalty, topology,
                 policy="exact")
@@ -316,7 +324,7 @@ def _place_everything(tier_index: int, policy: str):
         for p in profiles:
             pen = topology.demotion_penalty(p, t)
             placements[p.name] = Placement(t.name, pen)
-            used[t.name] += p.nbytes
+            used[t.name] += _bytes_on(p, topology, t.name)
             penalty += pen
         return Plan(placements, used, budgets, penalty, topology,
                     policy=policy)

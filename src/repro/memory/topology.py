@@ -119,10 +119,22 @@ class TierTopology:
     # ------------------------------------------------------------ cost model
     def step_time(self, profile, tier: Tier | str) -> float:
         """Seconds/step this tensor's traffic costs when resident on
-        ``tier`` (profile: ``repro.memory.profiles.AccessProfile``)."""
+        ``tier`` (profile: ``repro.memory.profiles.AccessProfile``).
+
+        A profile with quantized off-fast storage (``store_bytes``)
+        moves proportionally fewer bytes per touch over a slow tier —
+        dequant-on-gather streams the int8 rows, not the fp32 ones — so
+        both the traffic and the per-touch access size scale by
+        ``store_bytes/nbytes`` there."""
         t = tier if isinstance(tier, Tier) else self.tier(tier)
         rd, wr = profile.step_traffic()
-        return t.step_time(rd, wr, profile.access_size)
+        access = profile.access_size
+        sb = getattr(profile, "store_bytes", None)
+        if sb is not None and t.name != self.fast.name and profile.nbytes:
+            f = sb / profile.nbytes
+            rd, wr = rd * f, wr * f
+            access = max(1, int(access * f))
+        return t.step_time(rd, wr, access)
 
     def demotion_penalty(self, profile, tier: Tier | str | None = None
                          ) -> float:

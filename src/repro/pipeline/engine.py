@@ -81,6 +81,15 @@ class PipelineConfig:
     mesh_axes: tuple[str, ...] | None = None   # None -> auto axis names
     spmm: str | None = None            # None (auto) | 'ring'
     ring_steps: int | None = None      # banded ring band (n_steps < P)
+    # byte compression on the slow links (repro.api.CompressionCfg ->
+    # optim.compression): the gradient combine, capacity-tier embedding
+    # storage, and the ring payload.  The 'none'/'fp32' defaults build
+    # no compressor and stay bit-identical to the exact pipeline.
+    grad_compression: str = "none"     # 'none' | 'int8' | 'topk'
+    compression_frac: float = 0.01     # top-k kept fraction
+    compression_ef: bool = True        # carry compression residuals
+    embed_store: str = "fp32"          # 'fp32' | 'int8' slow-tier tables
+    ring_compression: str = "none"     # 'none' | 'int8' ring payload
     # held-out streaming evaluation (repro.eval); cadence lives in the
     # loop's LoopConfig.eval_every — these shape one eval sweep
     eval_k: int = 20
@@ -99,8 +108,9 @@ class Pipeline:
         # inert single-device path, bit-identical to the pre-shard
         # pipeline.  impl='ring' forces the ring route (BipartiteCSR
         # builds a degenerate 1-device plan when no mesh is configured).
-        self.shard = ShardPlan.from_config(cfg.mesh_shape, cfg.mesh_axes,
-                                           cfg.spmm, cfg.ring_steps)
+        self.shard = ShardPlan.from_config(
+            cfg.mesh_shape, cfg.mesh_axes, cfg.spmm, cfg.ring_steps,
+            ring_quant=(cfg.ring_compression == "int8"))
         self.g = BipartiteCSR(train.user, train.item, train.n_users,
                               train.n_items, impl=cfg.impl, shard=self.shard)
         self.shard = self.g.shard
@@ -126,9 +136,25 @@ class Pipeline:
                                      shard=self.shard,
                                      topology=self.topology,
                                      policy=cfg.memory_policy,
-                                     pins=cfg.memory_pins)
-        self.executor = TieredExecutor(self.plan.plan)
-        self._state0 = self.apply_plan({"params": params, "opt": opt_state})
+                                     pins=cfg.memory_pins,
+                                     embed_store=cfg.embed_store)
+        self.executor = TieredExecutor(self.plan.plan,
+                                       embed_store=cfg.embed_store)
+        # compressed gradient combine (None = exact fp32, bit-identical
+        # to the pre-compression step).  Its residual/key state rides
+        # the training state under "comp": the executor's fetch/commit
+        # only walk params/opt, and shard_state row-shards the stacked
+        # [P, ...] residuals over the mesh like any other large table.
+        self.compressor = None
+        if cfg.grad_compression != "none":
+            from repro.pipeline.compress import GradCompressor
+            self.compressor = GradCompressor(
+                cfg.grad_compression, cfg.compression_frac,
+                cfg.compression_ef, shard=self.shard)
+        state0 = {"params": params, "opt": opt_state}
+        if self.compressor is not None:
+            state0["comp"] = self.compressor.init_state(params, cfg.seed)
+        self._state0 = self.apply_plan(state0)
 
         # the loader iterates at GLOBAL microbatch granularity: one
         # loader batch feeds all P shards (microbatch rows each)
@@ -149,11 +175,17 @@ class Pipeline:
                 return bpr.bpr_loss(ue, ie, users, pos, neg, l2=l2)
             return jax.value_and_grad(loss_fn)(params)
 
+        compressor = self.compressor
+
         @jax.jit
         def apply_update(state, grads, lr):
+            out = {}
+            if compressor is not None:
+                grads, out["comp"] = compressor(grads, state["comp"])
             p, o = self.opt.update(grads, state["opt"], state["params"],
                                    lr=lr)
-            return {"params": p, "opt": o}
+            out["params"], out["opt"] = p, o
+            return out
 
         self._micro_value_and_grad = micro_value_and_grad
         self._apply_update = apply_update
@@ -353,8 +385,10 @@ class Pipeline:
             cfg.n_layers, cfg.embed_dim, self.sched, self.plan.impl,
             hbm_budget=cfg.hbm_budget, microbatch=self.plan.microbatch,
             shard=self.shard, topology=self.topology,
-            policy=cfg.memory_policy, pins=cfg.memory_pins)
-        self.executor = TieredExecutor(self.plan.plan)
+            policy=cfg.memory_policy, pins=cfg.memory_pins,
+            embed_store=cfg.embed_store)
+        self.executor = TieredExecutor(self.plan.plan,
+                                       embed_store=cfg.embed_store)
         return self.apply_plan(state)
 
     # ---------------------------------------------------------------- eval

@@ -23,14 +23,16 @@ import numpy as np
 
 from repro.core.large_batch import LargeBatchSchedule
 from repro.memory import (AccessProfile, Plan, TieredExecutor, get_policy,
-                          get_topology, memory_kind_sharding)
+                          get_topology, memory_kind_sharding,
+                          quantized_table_bytes)
 from repro.pipeline.registry import ModelSpec
 from repro.pipeline.shard import ShardPlan
 from repro.pipeline.sparse import BipartiteCSR
 
 
 def _leaf_profiles(tree, prefix: str, reads: float, writes: float,
-                   shard: ShardPlan | None = None):
+                   shard: ShardPlan | None = None,
+                   embed_store: str = "fp32"):
     out = []
     for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         name = prefix + jax.tree_util.keystr(kp)
@@ -44,14 +46,23 @@ def _leaf_profiles(tree, prefix: str, reads: float, writes: float,
             nbytes //= shard.shard_divisor(leaf.shape)
         row = (leaf.shape[-1] if getattr(leaf, "ndim", 0) else 1) * \
             leaf.dtype.itemsize
+        # int8 capacity-tier storage: 2-D fp32 params tables carry their
+        # quantized footprint (1B/element + one fp32 scale per row) —
+        # the same leaves TieredExecutor._wants_int8 quantizes
+        store = quantized_table_bytes(max(nbytes // row, 1), row) \
+            if (embed_store == "int8" and prefix == "params"
+                and getattr(leaf, "ndim", 0) == 2
+                and leaf.dtype == np.float32) else None
         out.append(AccessProfile(name, nbytes, reads_per_step=reads,
-                                 writes_per_step=writes, access_size=row))
+                                 writes_per_step=writes, access_size=row,
+                                 store_bytes=store))
     return out
 
 
 def profiles_from_state(params, opt_state, g: BipartiteCSR, n_layers: int,
                         spec: ModelSpec, embed_dim: int,
-                        shard: ShardPlan | None = None) -> list[AccessProfile]:
+                        shard: ShardPlan | None = None,
+                        embed_store: str = "fp32") -> list[AccessProfile]:
     """AccessProfiles over the run's actual tensor set (paper §2.1 memory
     model, measured from the live pytrees instead of assumed shapes).
 
@@ -64,7 +75,8 @@ def profiles_from_state(params, opt_state, g: BipartiteCSR, n_layers: int,
     profs = []
     # embedding tables + weights: read every layer fwd+bwd, written once
     profs += _leaf_profiles(params, "params", reads=2.0 * n_layers,
-                            writes=1.0, shard=shard)
+                            writes=1.0, shard=shard,
+                            embed_store=embed_store)
     # optimizer state: one read + one write per update
     profs += _leaf_profiles(opt_state, "opt", reads=1.0, writes=1.0,
                             shard=shard)
@@ -196,7 +208,8 @@ def build_train_plan(arch: str, spec: ModelSpec, params, opt_state,
                      shard: ShardPlan | None = None,
                      topology: "str | object" = "tpu-hbm-host",
                      policy: str = "greedy",
-                     pins: dict | None = None) -> TrainPlan:
+                     pins: dict | None = None,
+                     embed_store: str = "fp32") -> TrainPlan:
     """Profile -> place -> derive the microbatch.  ``topology`` names a
     registered ``TierTopology`` (or is one); ``policy`` names a
     registered placement policy; ``pins`` force tensors onto tiers by
@@ -210,7 +223,8 @@ def build_train_plan(arch: str, spec: ModelSpec, params, opt_state,
         budgets[topo.fast.name] = int(hbm_budget)
     budget = budgets[topo.fast.name]
     profs = profiles_from_state(params, opt_state, g, n_layers, spec,
-                                embed_dim, shard=shard)
+                                embed_dim, shard=shard,
+                                embed_store=embed_store)
     plan = get_policy(policy)(profs, topo, budgets=budgets, pins=pins)
     shards = shard.n_shards if shard is not None else 1
     if microbatch is None:

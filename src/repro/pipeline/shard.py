@@ -115,10 +115,13 @@ class ShardPlan:
     axes: tuple[str, ...] = ("data",)
     spmm: str | None = None          # None (auto) | 'ring'
     ring_steps: int | None = None    # banded ring: visit only n_steps owners
+    ring_quant: bool = False         # int8 ring payload rotation
+    #                                  (CompressionCfg.ring = 'int8')
 
     def __post_init__(self):
         object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
         object.__setattr__(self, "axes", tuple(str(a) for a in self.axes))
+        object.__setattr__(self, "ring_quant", bool(self.ring_quant))
         if len(self.shape) != len(self.axes):
             raise ValueError(f"mesh shape {self.shape} has "
                              f"{len(self.shape)} dims but axes {self.axes} "
@@ -207,20 +210,21 @@ class ShardPlan:
 
     def describe(self) -> str:
         band = f" ring_steps={self.ring_steps}" if self.ring_steps else ""
+        quant = " ring_quant=int8" if self.ring_quant else ""
         return (f"mesh={'x'.join(map(str, self.shape))} "
                 f"axes={','.join(self.axes)} "
-                f"spmm={'ring' if self.wants_ring else 'kernel'}{band}")
+                f"spmm={'ring' if self.wants_ring else 'kernel'}{band}{quant}")
 
     # ------------------------------------------------------------ builders
     @classmethod
     def from_config(cls, mesh_shape=(1,), mesh_axes=None, spmm=None,
-                    ring_steps=None) -> "ShardPlan | None":
+                    ring_steps=None, ring_quant=False) -> "ShardPlan | None":
         """The engine-facing constructor: returns ``None`` for the inert
         single-device default (no mesh, bit-identical legacy path), a
         live plan otherwise."""
         shape = tuple(int(s) for s in mesh_shape)
         axes = tuple(mesh_axes) if mesh_axes else auto_axes(shape)
-        plan = cls(shape, axes, spmm, ring_steps)
+        plan = cls(shape, axes, spmm, ring_steps, ring_quant)
         if not plan.is_sharded and not plan.wants_ring:
             return None
         return plan

@@ -138,7 +138,8 @@ class _RingGraph:
             src, dst, self.part.n_pad, self.shard.n_shards,
             n_steps=n_steps)
         fn = self._make_ring_spmm(self.shard.build_mesh(), self.shard.dp,
-                                  n_local, n_steps=n_steps)
+                                  n_local, n_steps=n_steps,
+                                  quantize=self.shard.ring_quant)
         return lambda x: fn(x, src_l, dst_l, mask)
 
     def _band_kept(self, src: np.ndarray, dst: np.ndarray):

@@ -3,17 +3,25 @@
 
 Builds the paper-scale placement plan (the ``lightgcn-full`` preset's
 §2.1 profile set, greedy policy, 30%-of-footprint fast-tier budget)
-under EVERY registered ``TierTopology`` preset and compares the result
-— tensor→tier assignments, per-tier usage, estimated step penalty, and
-the plan-emitted write-policy table — against the committed golden JSON
-(``tools/plan_snapshots.json``).
+under EVERY registered ``TierTopology`` preset — in TWO storage arms,
+fp32 and int8 embedding tables (``CompressionCfg.embed_store``), the
+latter snapshotted under ``<topology>@int8`` keys — and compares the
+result — tensor→tier assignments, per-tier usage, estimated step
+penalty, and the plan-emitted write-policy table — against the
+committed golden JSON (``tools/plan_snapshots.json``).
 
 A placement regression (a tensor silently changing tiers, a penalty
-shifting, a new topology preset without a snapshot) fails ``make test``
-and CI the same way a test-count regression does.
+shifting, a new topology preset without a snapshot, quantized byte
+pricing drifting) fails ``make test`` and CI the same way a test-count
+regression does.
 
     python tools/check_plan_snapshot.py            # compare (CI gate)
     python tools/check_plan_snapshot.py --update   # regenerate golden
+
+``--update`` rewrites ``plan_snapshots.json`` in place covering every
+registered topology × {fp32, int8} arm; rerun it after any intentional
+change to profiles, policies, topologies, or quantized pricing, and
+commit the regenerated file alongside the code change.
 """
 from __future__ import annotations
 
@@ -32,22 +40,26 @@ def build_snapshots() -> dict:
     from repro.memory import (get_policy, get_topology, gnn_recsys_profiles,
                               topology_names)
     spec = get_preset("lightgcn-full")
-    profiles = gnn_recsys_profiles(
+    arms = {store: gnn_recsys_profiles(
         spec.data.n_users, spec.data.n_items, spec.data.edges,
-        spec.model.embed_dim, spec.model.n_layers)
-    total = sum(p.nbytes for p in profiles)
+        spec.model.embed_dim, spec.model.n_layers, embed_store=store)
+        for store in ("fp32", "int8")}
+    total = sum(p.nbytes for p in arms["fp32"])
     out = {"_profile": {
         "preset": "lightgcn-full",
-        "n_tensors": len(profiles),
+        "n_tensors": len(arms["fp32"]),
         "total_bytes": int(total),
         "fast_budget_fraction": 0.3,
+        "storage_arms": ["fp32", "int8"],
     }}
     for name in topology_names():
         topo = get_topology(name)
         budgets = {topo.fast.name: int(total * 0.3),
                    topo.slow.name: max(topo.slow.capacity, total)}
-        plan = get_policy("greedy")(profiles, topo, budgets=budgets)
-        out[name] = plan.to_dict()
+        for store, profiles in arms.items():
+            plan = get_policy("greedy")(profiles, topo, budgets=budgets)
+            key = name if store == "fp32" else f"{name}@int8"
+            out[key] = plan.to_dict()
     return out
 
 
@@ -60,7 +72,8 @@ def main() -> int:
     if args.update:
         SNAPSHOT_PATH.write_text(json.dumps(got, indent=2, sort_keys=True)
                                  + "\n")
-        print(f"wrote {SNAPSHOT_PATH} ({len(got) - 1} topologies)")
+        print(f"wrote {SNAPSHOT_PATH} ({len(got) - 1} topology/storage "
+              "plans)")
         return 0
     if not SNAPSHOT_PATH.exists():
         print(f"FAIL: no golden snapshot at {SNAPSHOT_PATH}; run "
