@@ -16,6 +16,9 @@ from repro.data import synth
 ROWS: list[tuple] = []
 
 BENCH_DIR = os.environ.get("BENCH_DIR", "results")
+# canonical root-level artifacts: the cross-PR perf trajectory tracker
+# reads BENCH_*.json from the repo root, not from results/
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
@@ -23,15 +26,7 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
-def write_bench_json(name: str, section: str, payload: dict) -> str:
-    """Merge ``payload`` under ``section`` into ``results/BENCH_<name>.json``.
-
-    Versioned perf artifacts (``BENCH_*.json``, see ROADMAP) accumulate
-    sections from the modules that produce them, so two benchmarks can
-    contribute to the same file without clobbering each other.
-    """
-    path = os.path.join(BENCH_DIR, f"BENCH_{name}.json")
-    os.makedirs(BENCH_DIR, exist_ok=True)
+def _merge_json(path: str, section: str, payload: dict) -> None:
     data = {}
     if os.path.exists(path):
         with open(path) as f:
@@ -41,7 +36,25 @@ def write_bench_json(name: str, section: str, payload: dict) -> str:
         json.dump(data, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"# wrote {path} [{section}]")
-    return path
+
+
+def write_bench_json(name: str, section: str, payload: dict) -> str:
+    """Merge ``payload`` under ``section`` into ``BENCH_<name>.json`` —
+    at the repo root (the canonical versioned artifact the cross-PR
+    trajectory tracker reads) and mirrored under ``BENCH_DIR``
+    (``results/``, kept for existing tooling/CI checks).
+
+    Versioned perf artifacts (``BENCH_*.json``, see ROADMAP) accumulate
+    sections from the modules that produce them, so two benchmarks can
+    contribute to the same file without clobbering each other.
+    """
+    root_path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    _merge_json(root_path, section, payload)
+    mirror = os.path.join(BENCH_DIR, f"BENCH_{name}.json")
+    if os.path.abspath(mirror) != root_path:
+        os.makedirs(BENCH_DIR, exist_ok=True)
+        _merge_json(mirror, section, payload)
+    return root_path
 
 
 def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:

@@ -23,6 +23,7 @@ ALL = [
     "table5_memory_model",
     "table6_fullgraph_vs_subgraph",
     "roofline",
+    "serving",
 ]
 
 

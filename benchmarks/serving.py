@@ -1,0 +1,121 @@
+"""Serving hot-path benchmark: fused-vs-unfused scoring and
+cached-vs-uncached host-demoted tables under a power-law query stream.
+
+RecNMP's observation (PAPERS.md) is that production embedding traffic
+is sharply Zipfian, so the serving sweep is driven by a Zipf-ranked
+user stream rather than uniform ids.  Four arms, all bit-identical in
+results (pinned by tests/test_serving.py):
+
+  unfused          — both tables fast-tier resident, per-block streamed
+                     merge (the pre-fused baseline dataflow);
+  fused            — same placement, one fused gather+score+seen-mask+
+                     top-K kernel per query batch;
+  demoted_uncached — user table demoted to the capacity tier, every
+                     query batch row-gathers from the host store;
+  fused_cached     — demoted user table behind the LFU ``HotRowCache``
+                     + fused scoring: the hot set stays device-resident
+                     so steady-state traffic streams only the cold tail.
+
+Reports p50/p99 per-batch latency, cache hit rate, and slow-tier bytes
+streamed, into the root-level ``BENCH_serving.json`` perf-trajectory
+artifact (mirrored under ``results/``).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+from repro.eval.recommender import Recommender
+
+N_USERS = 2048
+N_ITEMS = 4096
+DIM = 32
+K = 10
+BATCH = 64
+ITEM_BLOCK = 256
+WARMUP = 3
+N_BATCHES = 40
+CACHE_ROWS = 512
+ZIPF_A = 1.3
+
+
+def _zipf_stream(rng, n_batches: int):
+    """Zipf-ranked user-id batches: rank r is drawn ∝ r^-a and mapped to
+    a fixed random permutation of the user space (hot set ≈ low ranks)."""
+    perm = rng.permutation(N_USERS)
+    ranks = np.minimum(rng.zipf(ZIPF_A, size=(n_batches, BATCH)) - 1,
+                       N_USERS - 1)
+    return perm[ranks].astype(np.int32)
+
+
+def _measure(rec: Recommender, stream: np.ndarray):
+    """Per-batch wall latencies (us) over the stream; first WARMUP
+    batches prime jit caches / the row cache and are excluded."""
+    lat = []
+    for i, batch in enumerate(stream):
+        t0 = time.perf_counter()
+        rec.recommend(batch)
+        dt = (time.perf_counter() - t0) * 1e6
+        if i >= WARMUP:
+            lat.append(dt)
+    lat = np.asarray(lat)
+    return {"p50_us": float(np.percentile(lat, 50)),
+            "p99_us": float(np.percentile(lat, 99)),
+            "batches": int(len(lat)), "batch_size": BATCH}
+
+
+def run():
+    rng = np.random.default_rng(0)
+    ue = rng.standard_normal((N_USERS, DIM)).astype(np.float32)
+    ie = rng.standard_normal((N_ITEMS, DIM)).astype(np.float32)
+    indptr = np.arange(N_USERS + 1) * 4
+    seen = rng.integers(0, N_ITEMS, indptr[-1])
+    stream = _zipf_stream(rng, N_BATCHES)
+    base = dict(seen_indptr=indptr, seen_items=seen, k=K,
+                user_batch=BATCH, item_block=ITEM_BLOCK,
+                topology="uniform")
+    demote = {"serve/user_embed": "slow"}
+
+    arms = {
+        "unfused": Recommender(ue, ie, fused=False, **base),
+        "fused": Recommender(ue, ie, fused=True, **base),
+        "demoted_uncached": Recommender(ue, ie, pins=demote, **base),
+        "fused_cached": Recommender(ue, ie, pins=demote,
+                                    cache_rows=CACHE_ROWS, **base),
+    }
+    payload = {"n_users": N_USERS, "n_items": N_ITEMS, "dim": DIM, "k": K,
+               "zipf_a": ZIPF_A, "cache_rows": CACHE_ROWS}
+    for name, rec in arms.items():
+        res = _measure(rec, stream)
+        stats = rec.cache_stats().get("serve/user_embed")
+        if stats is not None:
+            res.update(hit_rate=stats["hit_rate"],
+                       bytes_streamed=stats["bytes_streamed"])
+        payload[name] = res
+        emit(f"serving/{name}_p50", res["p50_us"],
+             f"p99={res['p99_us']:.0f}us")
+
+    payload["fused_speedup_p50"] = (payload["unfused"]["p50_us"]
+                                    / payload["fused"]["p50_us"])
+    payload["fused_cached_vs_unfused_p50"] = (
+        payload["unfused"]["p50_us"] / payload["fused_cached"]["p50_us"])
+    payload["demoted_uncached"]["bytes_streamed"] = int(
+        sum(len(b) * DIM * 4 for b in stream))   # every row re-gathered
+    payload["cache_bytes_saved_frac"] = 1.0 - (
+        payload["fused_cached"]["bytes_streamed"]
+        / payload["demoted_uncached"]["bytes_streamed"])
+    emit("serving/fused_speedup_p50", 0.0,
+         f"{payload['fused_speedup_p50']:.2f}x")
+    emit("serving/fused_cached_vs_unfused_p50", 0.0,
+         f"{payload['fused_cached_vs_unfused_p50']:.2f}x")
+    emit("serving/cache_bytes_saved", 0.0,
+         f"{payload['cache_bytes_saved_frac']*100:.0f}% of slow-tier "
+         f"stream (hit_rate={payload['fused_cached']['hit_rate']:.2f})")
+    write_bench_json("serving", "power_law_stream", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

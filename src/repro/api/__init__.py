@@ -7,8 +7,8 @@ drives the whole stack: ``build(spec)`` returns a ``Run`` exposing
 
   Experiment  — preset / dict / JSON-file constructors + overrides;
   ExperimentSpec, ModelCfg, DataCfg, PlanCfg, MeshCfg, MemoryCfg,
-      CompressionCfg, LoopCfg, EvalCfg — the typed, serializable
-      sections;
+      CompressionCfg, LoopCfg, EvalCfg, ServeCfg — the typed,
+      serializable sections;
   build / Run — spec -> live handle;
   get_preset / register_preset / preset_names — the preset registry
       (absorbs repro.configs FULL/SMOKE for the GNNRecSys family);
@@ -20,12 +20,12 @@ from repro.api.presets import get_preset, preset_names, register_preset
 from repro.api.run import Run, build
 from repro.api.spec import (CompressionCfg, DataCfg, EvalCfg,
                             ExperimentSpec, LoopCfg, MemoryCfg, MeshCfg,
-                            ModelCfg, PlanCfg)
+                            ModelCfg, PlanCfg, ServeCfg)
 
 __all__ = [
     "Experiment", "ExperimentSpec", "ModelCfg", "DataCfg", "PlanCfg",
     "MeshCfg", "MemoryCfg", "CompressionCfg", "LoopCfg", "EvalCfg",
-    "Run", "build",
+    "ServeCfg", "Run", "build",
     "get_preset", "register_preset", "preset_names", "load_data",
     "register_data_source", "DATA_SOURCES",
 ]

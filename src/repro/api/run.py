@@ -110,6 +110,8 @@ class Run:
         from repro.eval import Recommender
         kw.setdefault("k", self.spec.eval.k)
         kw.setdefault("item_block", self.spec.eval.item_block)
+        kw.setdefault("cache_rows", self.spec.serve.cache_rows)
+        kw.setdefault("fused", self.spec.serve.fused)
         return Recommender.from_pipeline(self.pipeline, self.state, **kw)
 
     def recommend(self, user_ids, k: int | None = None,

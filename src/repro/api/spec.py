@@ -4,9 +4,9 @@ The paper's thesis (§5-§7) is that batch size, tensor placement, and
 model depth must be co-tuned; before this module those knobs lived on
 three disconnected surfaces (``repro.configs`` registry entries,
 ``PipelineConfig``/``LoopConfig`` dataclasses, ad-hoc argparse flags).
-``ExperimentSpec`` is the single source of truth: eight typed sections
-(model / data / plan / mesh / memory / compression / loop / eval) plus
-the training hyperparameters,
+``ExperimentSpec`` is the single source of truth: nine typed sections
+(model / data / plan / mesh / memory / compression / loop / eval /
+serve) plus the training hyperparameters,
 with an exact ``to_dict``/``from_dict``/JSON round-trip and dotted-path
 overrides so a CLI flag, a preset, and a spec file all converge on the
 same object.  ``repro.api.build(spec)`` turns it into a ``Run``.
@@ -156,6 +156,27 @@ class EvalCfg:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeCfg:
+    """Serving hot-path knobs (``eval.Recommender``): the hot-row cache
+    budget in front of host-demoted embedding tables (device-resident
+    LFU slots, priced against the fast tier by
+    ``pipeline.plan.serving_profiles``) and the fused
+    gather+score+top-K kernel routing.  Defaults are the identity:
+    no cache, auto-fused — bit-identical results either way (pinned by
+    tests/test_serving.py)."""
+    cache_rows: int = 0              # device-resident hot rows; 0 = off
+    fused: bool | None = None        # None = auto (device-resident items)
+
+    def __post_init__(self):
+        if int(self.cache_rows) < 0:
+            raise ValueError(f"serve.cache_rows must be >= 0, "
+                             f"got {self.cache_rows}")
+        object.__setattr__(self, "cache_rows", int(self.cache_rows))
+        if self.fused is not None:
+            object.__setattr__(self, "fused", bool(self.fused))
+
+
+@dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
     """The whole experiment, declaratively."""
     name: str = "experiment"
@@ -168,6 +189,7 @@ class ExperimentSpec:
         default_factory=CompressionCfg)
     loop: LoopCfg = dataclasses.field(default_factory=LoopCfg)
     eval: EvalCfg = dataclasses.field(default_factory=EvalCfg)
+    serve: ServeCfg = dataclasses.field(default_factory=ServeCfg)
     optimizer: str = "adam"          # 'adam' | 'sgd'
     base_lr: float = 1e-3
     l2: float = 1e-4
@@ -244,7 +266,7 @@ class ExperimentSpec:
 _SECTIONS = {"model": ModelCfg, "data": DataCfg, "plan": PlanCfg,
              "mesh": MeshCfg, "memory": MemoryCfg,
              "compression": CompressionCfg, "loop": LoopCfg,
-             "eval": EvalCfg}
+             "eval": EvalCfg, "serve": ServeCfg}
 
 
 def _fields(cls) -> dict:

@@ -14,6 +14,14 @@ kind when the backend has one, and behind the row-granular
 each query batch's user rows / each item block out of the host store,
 so demotion changes where bytes live and stream from, not just the
 ``describe()`` string.
+
+Serving knobs (``repro.api.ServeCfg``): ``cache_rows`` puts a
+device-resident LFU ``HotRowCache`` in front of every host-demoted
+table (its slot budget priced against the fast tier by
+``serving_profiles``), so Zipfian traffic streams only the cold tail;
+``fused`` routes scoring through the fused gather+score+top-K kernel
+(auto on for device-resident item tables).  Both are bit-identical to
+the plain streamed path.
 """
 from __future__ import annotations
 
@@ -23,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.eval.topk import (DEFAULT_ITEM_BLOCK, DEFAULT_USER_BATCH,
-                             streaming_topk)
+                             streaming_topk, validate_user_ids)
 from repro.memory import HostResident, TieredExecutor, get_policy, \
     get_topology, quantized_table_bytes
 from repro.pipeline.plan import serving_profiles
@@ -38,11 +46,14 @@ class Recommender:
                  item_block: int = DEFAULT_ITEM_BLOCK,
                  impl: str | None = None, hbm_budget: int | None = None,
                  topology: str = "tpu-hbm-host", policy: str = "greedy",
-                 pins: dict | None = None, embed_store: str = "fp32"):
+                 pins: dict | None = None, embed_store: str = "fp32",
+                 cache_rows: int = 0, fused: bool | None = None):
         self.k = int(k)
         self.user_batch = int(user_batch)
         self.item_block = int(item_block)
         self.impl = impl or default_impl()
+        self.cache_rows = int(cache_rows)
+        self.fused = fused
         self.seen_indptr = None if seen_indptr is None \
             else np.asarray(seen_indptr, np.int64)
         self.seen_items = None if seen_items is None \
@@ -55,18 +66,22 @@ class Recommender:
         if hbm_budget is not None:
             budgets[topo.fast.name] = int(hbm_budget)
         row = int(item_e.shape[-1]) * item_e.dtype.itemsize
-        profs = serving_profiles(user_e.nbytes, item_e.nbytes, row)
+        profs = serving_profiles(user_e.nbytes, item_e.nbytes, row,
+                                 cache_rows=self.cache_rows)
         if embed_store == "int8":
             # demoted tables live quantized (~1/4 bytes): price the
             # placement on their stored footprint, serve via the
             # dequant-on-gather facade below
-            profs = [dataclasses.replace(
-                p, store_bytes=quantized_table_bytes(
-                    int(p.nbytes // row), row)) for p in profs]
+            profs = [p if p.name == "serve/hot_cache" else
+                     dataclasses.replace(
+                         p, store_bytes=quantized_table_bytes(
+                             int(p.nbytes // row), row)) for p in profs]
         self.plan = get_policy(policy)(profs, topo, budgets=budgets,
                                        pins=pins)
-        executor = TieredExecutor(self.plan, prefixes=(),
-                                  embed_store=embed_store)
+        self._executor = TieredExecutor(self.plan, prefixes=(),
+                                        embed_store=embed_store,
+                                        cache_rows=self.cache_rows)
+        executor = self._executor
 
         def place_table(name, table):
             placed = executor.host_table(name, table)
@@ -106,18 +121,43 @@ class Recommender:
         k = self.k if k is None else int(k)
         si, sv = (self.seen_indptr, self.seen_items) if exclude_seen \
             else (None, None)
+        user_ids = np.asarray(user_ids)
+        validate_user_ids(user_ids, self.n_users)
         scores, ids = streaming_topk(
-            self.user_e, self.item_e, k, user_ids=np.asarray(user_ids),
+            self.user_e, self.item_e, k, user_ids=user_ids,
             seen_indptr=si, seen_items=sv, user_batch=self.user_batch,
-            item_block=self.item_block, impl=self.impl)
+            item_block=self.item_block, impl=self.impl, fused=self.fused)
         return ids, scores
+
+    def cache_stats(self) -> dict[str, dict]:
+        """Per-table hot-row cache counters (hits, misses, bytes
+        streamed, hit_rate); empty when ``cache_rows == 0`` or nothing
+        is host-demoted."""
+        return self._executor.cache_stats()
+
+    def prefill_cache(self, user_ids=None) -> None:
+        """Warm the hot-row caches: stream the given user rows (all the
+        cache fits by default) into the device-resident slots up front."""
+        for name, cache in self._executor.caches.items():
+            if name == "serve/user_embed":
+                ids = np.arange(cache.rows) if user_ids is None \
+                    else np.asarray(user_ids)
+                self._executor.prefetch_rows(name, ids)
 
     def describe(self) -> str:
         tiers = {n: p.tier for n, p in self.plan.placements.items()}
+        cache = ""
+        stats = self.cache_stats()
+        if stats:
+            parts = [f"{n.split('/')[-1]}: rows={self._executor.caches[n].rows} "
+                     f"hit_rate={s['hit_rate']:.2f} "
+                     f"streamed={s['bytes_streamed']}B"
+                     for n, s in stats.items()]
+            cache = f" cache[{'; '.join(parts)}]"
         return (f"Recommender[{self.n_users}U x {self.n_items}I] "
                 f"impl={self.impl} k={self.k} block={self.item_block} "
                 f"topology={self.plan.topology.name} "
                 f"policy={self.plan.policy} "
                 f"user_embed->{tiers['serve/user_embed']} "
                 f"item_embed->{tiers['serve/item_embed']} "
-                f"(offloaded={self.n_offloaded})")
+                f"(offloaded={self.n_offloaded}){cache}")

@@ -17,8 +17,21 @@ scores users in fixed-size microbatches against *item blocks*:
   * a running per-user top-K carry merges each block via
     ``jax.lax.top_k`` over the concatenated ``[carry ‖ block]`` scores.
 
-Peak device memory is therefore ``O(batch × (K + block))`` regardless of
-catalogue size.
+The sweep is *block-major*: every query batch's user rows, seen ids and
+top-K carries are staged once up front (``O(n_q × (D + K + deg))``),
+then each item block is gathered/uploaded exactly **once** and merged
+into every batch's carry before the next block streams.  The earlier
+user-major ordering re-streamed the whole catalogue per user batch —
+Q× the catalogue bytes over a sweep, the exact redundant-traffic
+pathology the paper's tiering analysis flags.  Peak device memory is
+``O(n_q × (D + K + deg) + block × D)`` — still never the dense ``U×I``
+score matrix.
+
+When the item table is device-resident (and the sweep is unsharded) the
+whole per-block pipeline instead runs as one fused gather+score+mask+
+top-K kernel per user batch (``kernels.ops.fused_topk_score`` — Pallas
+on TPU, a single jitted XLA loop elsewhere), keeping the same dispatch
+``impl`` routing as training and bit-identical results.
 
 Tie-breaking contract (pinned by tests/test_eval.py): results are
 ordered by (score desc, item id asc) — identical to a stable dense
@@ -95,11 +108,32 @@ def _padded_seen(user_ids: np.ndarray, indptr: np.ndarray, items: np.ndarray,
     return padded, mask
 
 
+def validate_user_ids(user_ids: np.ndarray, n_users: int) -> None:
+    """Uniform out-of-range policy across placements.
+
+    Raw numpy indexing (``HostResident.take``) wraps negative ids and
+    raises on large ones, while the device gather clamps — so an
+    adversarial id would silently return *different users* depending on
+    where the planner happened to put the table.  Reject at the serving
+    boundary instead.
+    """
+    if len(user_ids) == 0:
+        return
+    lo, hi = int(user_ids.min()), int(user_ids.max())
+    if lo < 0 or hi >= n_users:
+        bad = hi if hi >= n_users else lo
+        raise ValueError(
+            f"user_ids out of range: id {bad} not in [0, {n_users}); "
+            "out-of-range ids are rejected uniformly regardless of "
+            "embedding-table placement")
+
+
 def streaming_topk(user_e, item_e, k: int, *, user_ids=None,
                    seen_indptr=None, seen_items=None,
                    user_batch: int = DEFAULT_USER_BATCH,
                    item_block: int = DEFAULT_ITEM_BLOCK,
-                   impl: str | None = None, shard=None):
+                   impl: str | None = None, shard=None,
+                   fused: bool | None = None):
     """Top-K items per user without materializing the U×I score matrix.
 
     user_e, item_e: [U, D] / [I, D] embedding tables (any tier).  A
@@ -118,6 +152,11 @@ def streaming_topk(user_e, item_e, k: int, *, user_ids=None,
       batch against the (replicated) item blocks.  Results are
       identical to the unsharded sweep (same block schedule, same
       merges — only the batch rows are distributed).
+    fused: route through the fused gather+score+top-K kernel.  None
+      (default) auto-selects: fused whenever the item table is
+      device-resident and the sweep is unsharded.  ``fused=True`` with a
+      host-resident item table or a sharded sweep raises — the fused
+      kernel needs the table addressable from device.
     Returns (scores f32[n, k], ids i32[n, k]) numpy arrays, ordered by
     (score desc, id asc); invalid slots are (-inf, -1).
     """
@@ -129,11 +168,20 @@ def streaming_topk(user_e, item_e, k: int, *, user_ids=None,
     if item_host is None:
         item_e = jnp.asarray(item_e)
     n_items = int(item_e.shape[0])
+    n_users = int(user_e.shape[0])
     if user_ids is None:
-        user_ids = np.arange(user_e.shape[0], dtype=np.int32)
+        user_ids = np.arange(n_users, dtype=np.int32)
     user_ids = np.asarray(user_ids, np.int32)
+    validate_user_ids(user_ids, n_users)
     n_q = len(user_ids)
     k = int(k)
+    fused_ok = item_host is None and (shard is None or not shard.is_sharded)
+    if fused and not fused_ok:
+        raise ValueError(
+            "fused=True needs a device-resident item table and an "
+            "unsharded sweep (host-demoted tables stream block-major; "
+            "sharded sweeps merge per-slice)")
+    use_fused = fused_ok if fused is None else bool(fused)
     if n_q == 0 or n_items == 0:
         return (np.full((n_q, k), NEG_INF, np.float32),
                 np.full((n_q, k), -1, np.int32))
@@ -151,7 +199,7 @@ def streaming_topk(user_e, item_e, k: int, *, user_ids=None,
     out_s = np.full((n_q, k), NEG_INF, np.float32)
     out_i = np.full((n_q, k), -1, np.int32)
 
-    for lo in range(0, n_q, ub):
+    def stage_batch(lo):
         sel = user_ids[lo:lo + ub]
         b = len(sel)
         sel_p = np.pad(sel, (0, ub - b))        # pad batch: static jit shape
@@ -162,8 +210,25 @@ def streaming_topk(user_e, item_e, k: int, *, user_ids=None,
         else:
             seen = np.zeros((ub, 0), np.int32)
             smask = np.zeros((ub, 0), bool)
-        seen_d = jnp.asarray(seen)
-        smask_d = jnp.asarray(smask)
+        return lo, b, ue, jnp.asarray(seen), jnp.asarray(smask)
+
+    if use_fused:
+        # one kernel launch per user batch — the item table never
+        # leaves device memory, so there is nothing to re-stream
+        for lo in range(0, n_q, ub):
+            lo, b, ue, seen_d, smask_d = stage_batch(lo)
+            top_s, top_i = kops.fused_topk_score(
+                ue, item_e, seen_d, smask_d, k=k, n_items=n_items,
+                item_block=blk, impl=impl)
+            out_s[lo:lo + b] = np.asarray(top_s)[:b]
+            out_i[lo:lo + b] = np.asarray(top_i)[:b]
+        return out_s, out_i
+
+    # block-major sweep: stage every user batch once, then stream each
+    # item block exactly once and fold it into every batch's carry
+    batches = []
+    for lo in range(0, n_q, ub):
+        lo, b, ue, seen_d, smask_d = stage_batch(lo)
         carry_s = jnp.full((ub, k), NEG_INF, jnp.float32)
         carry_i = jnp.full((ub, k), -1, jnp.int32)
         if shard is not None and shard.is_sharded:
@@ -171,18 +236,19 @@ def streaming_topk(user_e, item_e, k: int, *, user_ids=None,
             # merge then runs one user-slice per device (GSPMD)
             ue, seen_d, smask_d, carry_s, carry_i = shard.shard_batch(
                 ue, seen_d, smask_d, carry_s, carry_i)
-        for b0 in range(0, n_blocks * blk, blk):
-            ids_np = np.arange(b0, b0 + blk)
-            valid = ids_np < n_items
-            block_ids = jnp.asarray(
-                np.where(valid, ids_np, -1).astype(np.int32))
-            safe_ids = np.where(valid, ids_np, 0)
-            ie_blk = jnp.asarray(item_host.block(safe_ids)) \
-                if item_host is not None else _gather_rows(item_e, safe_ids,
-                                                           impl)
-            carry_s, carry_i = _merge_block(
-                ue, ie_blk, block_ids, seen_d, smask_d, jnp.int32(b0),
-                carry_s, carry_i, k=k)
+        batches.append([lo, b, ue, seen_d, smask_d, carry_s, carry_i])
+    for b0 in range(0, n_blocks * blk, blk):
+        ids_np = np.arange(b0, b0 + blk)
+        valid = ids_np < n_items
+        block_ids = jnp.asarray(np.where(valid, ids_np, -1).astype(np.int32))
+        safe_ids = np.where(valid, ids_np, 0)
+        ie_blk = jnp.asarray(item_host.block(safe_ids)) \
+            if item_host is not None else _gather_rows(item_e, safe_ids, impl)
+        for bt in batches:
+            bt[5], bt[6] = _merge_block(
+                bt[2], ie_blk, block_ids, bt[3], bt[4], jnp.int32(b0),
+                bt[5], bt[6], k=k)
+    for lo, b, _, _, _, carry_s, carry_i in batches:
         out_s[lo:lo + b] = np.asarray(carry_s)[:b]
         out_i[lo:lo + b] = np.asarray(carry_i)[:b]
     return out_s, out_i

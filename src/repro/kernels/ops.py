@@ -21,6 +21,7 @@ from repro.kernels import embedding_bag as _eb
 from repro.kernels import ref as _ref
 from repro.kernels import sddmm as _sddmm
 from repro.kernels import spmm as _spmm
+from repro.kernels import topk_score as _topk
 
 
 def __getattr__(name):
@@ -63,3 +64,17 @@ def embedding_bag(table, ids, mask, combiner="sum", impl="xla", **kw):
         return _ref.embedding_bag_ref(table, ids, mask, combiner)
     return _eb.embedding_bag_pallas(table, ids, mask, combiner,
                                     interpret=not _on_tpu(), **kw)
+
+
+def fused_topk_score(ue, table, seen, seen_mask, *, k, n_items,
+                     item_block=1024, impl="xla", **kw):
+    """Serving hot path: gather + score + seen-mask + top-K in one call.
+    Returns (scores f32[B, k], ids i32[B, k]), (score desc, id asc)."""
+    if impl == "xla":
+        return _ref.fused_topk_score_ref(ue, table, seen, seen_mask, k=k,
+                                         item_block=item_block,
+                                         n_items=n_items)
+    return _topk.fused_topk_score_pallas(ue, table, seen, seen_mask, k=k,
+                                         item_block=item_block,
+                                         n_items=n_items,
+                                         interpret=not _on_tpu(), **kw)

@@ -1,6 +1,8 @@
 """Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -49,3 +51,48 @@ def embedding_bag_ref(table: jax.Array, ids: jax.Array, mask: jax.Array,
         cnt = jnp.maximum(mask.sum(axis=1), 1)
         out = out / cnt[:, None]
     return out
+
+
+@functools.partial(jax.jit, static_argnames=("k", "item_block", "n_items"))
+def fused_topk_score_ref(ue: jax.Array, table: jax.Array, seen: jax.Array,
+                         seen_mask: jax.Array, *, k: int, item_block: int,
+                         n_items: int):
+    """XLA oracle for the fused serving kernel: one jitted sweep over
+    item blocks doing score -> -0.0 canonicalization -> seen-mask ->
+    running top-K merge, with the exact per-block ops (and therefore the
+    exact bit patterns and tie order) of ``eval.topk``'s streamed merge.
+    Returns (scores f32[B, k], ids i32[B, k]); short slots are
+    (-inf, -1)."""
+    neg_inf = float("-inf")
+    b = ue.shape[0]
+    blk = int(min(item_block, max(n_items, 1)))
+    n_blocks = -(-n_items // blk)
+    tpad = n_blocks * blk - table.shape[0]
+    table = jnp.pad(table, ((0, tpad), (0, 0))) if tpad else table
+    table = table.astype(jnp.float32)
+    ue = ue.astype(jnp.float32)
+    seen = jnp.asarray(seen, jnp.int32)
+    seen_mask = jnp.asarray(seen_mask, bool)
+    rows_b = jnp.arange(b)[:, None]
+
+    def body(j, carry):
+        carry_s, carry_i = carry
+        start = j * blk
+        ie_blk = jax.lax.dynamic_slice_in_dim(table, start, blk, axis=0)
+        scores = ue @ ie_blk.T
+        scores = jnp.where(scores == 0.0, 0.0, scores)
+        ids = start + jax.lax.broadcasted_iota(jnp.int32, (b, blk), 1)
+        scores = jnp.where(ids < n_items, scores, neg_inf)
+        pos = seen - start
+        in_block = seen_mask & (pos >= 0) & (pos < blk)
+        cols = jnp.where(in_block, pos, blk)           # overflow column
+        hit = jnp.zeros((b, blk + 1), bool).at[rows_b, cols].set(True)[:, :blk]
+        scores = jnp.where(hit, neg_inf, scores)
+        cat_s = jnp.concatenate([carry_s, scores], axis=1)
+        cat_i = jnp.concatenate([carry_i, ids], axis=1)
+        top_s, idx = jax.lax.top_k(cat_s, k)
+        return top_s, jnp.take_along_axis(cat_i, idx, axis=1)
+
+    init = (jnp.full((b, k), neg_inf, jnp.float32),
+            jnp.full((b, k), -1, jnp.int32))
+    return jax.lax.fori_loop(0, n_blocks, body, init)

@@ -1,0 +1,141 @@
+"""Pallas TPU fused serving kernel — gather + score + seen-mask + top-K.
+
+The serving hot loop used to run as four separate XLA ops per item
+block (row gather -> dense matmul -> seen-mask scatter -> ``lax.top_k``
+merge), each a separate dispatch with its own HBM round-trip for the
+score tile.  This kernel is the paper's §4 dataflow rewrite applied to
+serving: the item table stays in HBM (on a real deployment, the
+capacity tier) and each program
+
+  * DMAs one item *block* of rows into VMEM (the row gather — only the
+    block's bytes ever leave HBM),
+  * scores its user tile against the block on the MXU,
+  * masks already-seen items in place (no dense U×I boolean mask),
+  * folds the block into a running per-user top-K carry,
+
+so the score tile never leaves VMEM and the only HBM writes are the
+final ``[B, K]`` results.  The grid tiles the *user batch* (tiles are
+independent — no cross-program carry); the block loop runs inside each
+program with the carry as a ``fori_loop`` value.
+
+Tie-breaking contract (identical to ``eval/topk.py``'s streamed merge,
+pinned by tests/test_kernel_parity.py): results are ordered by
+(score desc, item id asc) because the carry precedes the block in the
+top-k concatenation, block ids ascend, and earlier blocks hold lower
+ids.  Scores equal to zero are canonicalized to +0.0 first —
+``lax.top_k`` sorts by IEEE total order (-0.0 < +0.0) while
+comparison-based dense sorts treat them as a tie.  Slots with fewer
+than K scoreable candidates return id -1 with score -inf.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import MEM_HBM, CompilerParams
+
+NEG_INF = float("-inf")
+DEFAULT_USER_TILE = 64
+
+
+def _kernel(table_hbm, ue_ref, seen_ref, smask_ref, out_s_ref, out_i_ref,
+            blk_buf, sem, *, blk: int, n_blocks: int, n_items: int, k: int,
+            seen_len: int):
+    tile = ue_ref.shape[0]
+    ue = ue_ref[...]
+
+    def block_body(j, carry):
+        carry_s, carry_i = carry
+        start = j * blk
+        cp = pltpu.make_async_copy(table_hbm.at[pl.ds(start, blk), :],
+                                   blk_buf, sem)
+        cp.start()
+        cp.wait()
+        scores = jnp.dot(ue, blk_buf[...].T,
+                         preferred_element_type=jnp.float32)
+        # -0.0 -> +0.0 before any masking: one total order for ties
+        scores = jnp.where(scores == 0.0, 0.0, scores)
+        ids = start + jax.lax.broadcasted_iota(jnp.int32, (tile, blk), 1)
+        scores = jnp.where(ids < n_items, scores, NEG_INF)
+
+        def seen_body(l, s):
+            pos = seen_ref[:, l] - start                       # [tile]
+            live = (smask_ref[:, l] > 0) & (pos >= 0) & (pos < blk)
+            col = jax.lax.broadcasted_iota(jnp.int32, (tile, blk), 1)
+            return jnp.where(live[:, None] & (col == pos[:, None]),
+                             NEG_INF, s)
+
+        scores = jax.lax.fori_loop(0, seen_len, seen_body, scores,
+                                   unroll=False)
+        cat_s = jnp.concatenate([carry_s, scores], axis=1)
+        cat_i = jnp.concatenate([carry_i, ids], axis=1)
+        top_s, idx = jax.lax.top_k(cat_s, k)
+        return top_s, jnp.take_along_axis(cat_i, idx, axis=1)
+
+    init = (jnp.full((tile, k), NEG_INF, jnp.float32),
+            jnp.full((tile, k), -1, jnp.int32))
+    carry_s, carry_i = jax.lax.fori_loop(0, n_blocks, block_body, init,
+                                         unroll=False)
+    out_s_ref[...] = carry_s
+    out_i_ref[...] = carry_i
+
+
+@functools.partial(jax.jit, static_argnames=("k", "item_block", "n_items",
+                                             "user_tile", "interpret"))
+def fused_topk_score_pallas(ue: jax.Array, table: jax.Array,
+                            seen: jax.Array, seen_mask: jax.Array, *,
+                            k: int, item_block: int, n_items: int,
+                            user_tile: int = DEFAULT_USER_TILE,
+                            interpret: bool = True):
+    """ue: f32[B, D]; table: f32[I, D] (HBM-resident, block-DMA'd);
+    seen/seen_mask: i32/bool[B, L] padded per-user seen-item ids ->
+    (scores f32[B, k], ids i32[B, k])."""
+    b_in, d = ue.shape
+    blk = int(min(item_block, max(n_items, 1)))
+    n_blocks = math.ceil(n_items / blk)
+    tile = int(min(user_tile, max(b_in, 1)))
+    b_pad = math.ceil(b_in / tile) * tile
+    pad = b_pad - b_in
+    ue = jnp.pad(ue, ((0, pad), (0, 0))) if pad else ue
+    # the block DMA reads n_blocks*blk rows: pad the table tail once
+    tpad = n_blocks * blk - table.shape[0]
+    table = jnp.pad(table, ((0, tpad), (0, 0))) if tpad else table
+    seen = jnp.asarray(seen, jnp.int32)
+    seen_mask = jnp.asarray(seen_mask, jnp.int32)
+    if seen.shape[1] == 0:                  # Pallas dislikes 0-wide blocks
+        seen = jnp.zeros((b_in, 1), jnp.int32)
+        seen_mask = jnp.zeros((b_in, 1), jnp.int32)
+    if pad:
+        seen = jnp.pad(seen, ((0, pad), (0, 0)))
+        seen_mask = jnp.pad(seen_mask, ((0, pad), (0, 0)))
+    seen_len = seen.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(b_pad // tile,),
+        in_specs=[pl.BlockSpec(memory_space=MEM_HBM),
+                  pl.BlockSpec((tile, d), lambda i: (i, 0)),
+                  pl.BlockSpec((tile, seen_len), lambda i: (i, 0)),
+                  pl.BlockSpec((tile, seen_len), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((tile, k), lambda i: (i, 0)),
+                   pl.BlockSpec((tile, k), lambda i: (i, 0))],
+        scratch_shapes=[pltpu.VMEM((blk, d), jnp.float32),
+                        pltpu.SemaphoreType.DMA],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel, blk=blk, n_blocks=n_blocks,
+                          n_items=n_items, k=k, seen_len=seen_len),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b_pad, k), jnp.float32),
+                   jax.ShapeDtypeStruct((b_pad, k), jnp.int32)],
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="fused_topk_score",
+    )
+    out_s, out_i = fn(table.astype(jnp.float32), ue.astype(jnp.float32),
+                      seen, seen_mask)
+    return out_s[:b_in], out_i[:b_in]

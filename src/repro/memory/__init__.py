@@ -18,6 +18,7 @@ Three layers, replacing the hardcoded constants + advisory placement of
 The Experiment API surface is ``repro.api.MemoryCfg``; the planner
 entry is ``repro.pipeline.plan.build_train_plan``.
 """
+from repro.memory.cache import CacheStats, HotRowCache
 from repro.memory.executor import (HostResident, QuantizedHostResident,
                                    TieredExecutor, memory_kind_sharding)
 from repro.memory.policies import (Placement, PlacementPolicy, Plan,
@@ -36,5 +37,5 @@ __all__ = [
     "Placement", "Plan", "PlacementPolicy", "get_policy",
     "register_policy", "policy_names", "place_greedy", "place_exact",
     "TieredExecutor", "HostResident", "QuantizedHostResident",
-    "memory_kind_sharding",
+    "memory_kind_sharding", "HotRowCache", "CacheStats",
 ]

@@ -1,0 +1,152 @@
+"""HotRowCache — software-managed device-resident cache for slow-tier
+embedding rows.
+
+RecNMP's central serving observation (PAPERS.md) is that embedding
+access under production traffic is sharply Zipfian: a small hot set of
+rows serves most requests.  MTrainS exploits the same skew with
+byte-addressable hot/cold tiering.  This module applies both to the
+demoted serving tables: a ``HostResident``/``QuantizedHostResident``
+table keeps its bytes in the capacity tier, and a fixed budget of
+device-resident row slots absorbs the hot set, so steady-state Zipfian
+traffic streams only the cold tail over the slow link.
+
+Policy: LFU residency with an admission filter (TinyLFU-style).  Every
+requested row bumps a frequency counter whether or not it is resident;
+a miss is admitted into a free slot unconditionally, but once the cache
+is full it only displaces the coldest resident when the newcomer's
+frequency is strictly higher — one-shot scans cannot flush the hot set.
+Eviction is deterministic (first minimum-frequency slot), so a serving
+sweep is reproducible.
+
+Bit-identity: a cached row is byte-for-byte the row ``backing.take``
+returns (the dequantized fp32 view for the int8 arm — dequantization is
+deterministic), and a query's output rows are assembled *before* any
+admission/eviction from this query mutates the store, so cache-enabled
+serving returns exactly the cache-off results (pinned by
+tests/test_serving.py and the slow sweep in tests/test_kernel_parity.py).
+
+The planner prices the slot budget against the fast tier
+(``pipeline.plan.serving_profiles(cache_rows=...)`` adds a pinned-fast
+``serve/hot_cache`` profile), and ``TieredExecutor``/`
+``Recommender.describe()`` surface the hit/miss/bytes-streamed
+counters.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.memory.executor import HostResident
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Hit/miss accounting in *distinct rows per query* (a row requested
+    twice in one batch costs one lookup, like one gather)."""
+    hits: int = 0
+    misses: int = 0
+    bytes_streamed: int = 0
+    fills: int = 0
+    evictions: int = 0
+    queries: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def to_dict(self) -> dict:
+        return {**dataclasses.asdict(self), "hit_rate": self.hit_rate}
+
+
+class HotRowCache(HostResident):
+    """LFU device-resident row cache over a slow-tier table facade.
+
+    Subclasses ``HostResident`` so serving code that type-routes on the
+    facade (``eval.topk.streaming_topk``) streams through the cache
+    transparently; ``take``/``block`` return rows bit-identical to the
+    uncached gather, with only the misses counted as slow-tier traffic.
+    """
+
+    def __init__(self, backing: HostResident, rows: int):
+        if not isinstance(backing, HostResident):
+            backing = HostResident(backing)
+        self.backing = backing
+        n, d = backing.shape
+        self.rows = int(min(max(rows, 0), n))
+        self.stats = CacheStats()
+        self._freq = np.zeros(n, np.int64)
+        self._slot_of = np.full(n, -1, np.int64)       # row -> slot
+        self._slot_ids = np.full(self.rows, -1, np.int64)  # slot -> row
+        self._free = list(range(self.rows - 1, -1, -1))
+        # the fast-tier slot pool.  Kept as a contiguous buffer the same
+        # way TieredExecutor keeps tier residency on backends without
+        # discrete device memories (CPU CI): what matters for the model
+        # is which bytes cross the slow link (stats.bytes_streamed), and
+        # slot reads never do.
+        self._store = np.zeros((self.rows, d), np.float32)
+
+    shape = property(lambda self: self.backing.shape)
+    dtype = property(lambda self: np.dtype(np.float32))
+    nbytes = property(lambda self: self.backing.nbytes)
+
+    @property
+    def resident_rows(self) -> int:
+        return self.rows - len(self._free)
+
+    def _admit(self, rows: np.ndarray, data: np.ndarray) -> None:
+        """Fill free slots; once full, displace the coldest resident only
+        when the newcomer is strictly hotter (deterministic first-min
+        eviction)."""
+        for j, r in enumerate(rows):
+            if self._free:
+                s = self._free.pop()
+            else:
+                resident_freq = self._freq[self._slot_ids]
+                v = int(np.argmin(resident_freq))
+                if self._freq[r] <= resident_freq[v]:
+                    continue                     # admission filter
+                self._slot_of[self._slot_ids[v]] = -1
+                self.stats.evictions += 1
+                s = v
+            self._slot_ids[s] = r
+            self._slot_of[r] = s
+            self._store[s] = data[j]
+            self.stats.fills += 1
+
+    def take(self, ids):
+        ids = np.asarray(ids)
+        uniq, inv = np.unique(ids, return_inverse=True)
+        self.stats.queries += 1
+        self._freq[uniq] += 1
+        slots = self._slot_of[uniq]
+        resident = slots >= 0
+        self.stats.hits += int(resident.sum())
+        # assemble the output from the *pre-admission* store: this
+        # query's evictions must not corrupt this query's rows
+        out = np.empty((len(uniq), self.shape[1]), np.float32)
+        out[resident] = self._store[slots[resident]]
+        missed = uniq[~resident]
+        self.stats.misses += len(missed)
+        if len(missed):
+            streamed = np.asarray(self.backing.take(missed), np.float32)
+            self.stats.bytes_streamed += streamed.nbytes
+            out[~resident] = streamed
+            self._admit(missed, streamed)
+        return out[inv]
+
+    def block(self, ids):
+        return self.take(ids)
+
+    def prefill(self, ids) -> None:
+        """Warm the cache (the executor's prefetch/fill path): stream the
+        given rows up front, without counting them as serving traffic
+        hits/misses."""
+        ids = np.unique(np.asarray(ids))
+        self._freq[ids] += 1
+        missed = ids[self._slot_of[ids] < 0]
+        if len(missed):
+            data = np.asarray(self.backing.take(missed), np.float32)
+            self.stats.bytes_streamed += data.nbytes
+            self._admit(missed, data)

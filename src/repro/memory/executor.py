@@ -126,14 +126,19 @@ class TieredExecutor:
 
     def __init__(self, plan: Plan, prefixes: tuple[str, ...] = ("params",
                                                                 "opt"),
-                 embed_store: str = "fp32"):
+                 embed_store: str = "fp32", cache_rows: int = 0):
         if embed_store not in ("fp32", "int8"):
             raise ValueError(f"unknown embed_store {embed_store!r}; "
                              "known: fp32, int8")
+        if cache_rows < 0:
+            raise ValueError(f"cache_rows must be >= 0, got {cache_rows}")
         self.plan = plan
         self.topology = plan.topology
         self.prefixes = prefixes
         self.embed_store = embed_store
+        self.cache_rows = int(cache_rows)
+        # hot-row caches wrapped around host-store serving tables
+        self.caches: dict[str, object] = {}
         # host-store leaves currently demoted (by profile name)
         self._host_names: set[str] = set()
         # int8 buffers for quantized host-store tables: name -> (q, scale)
@@ -236,7 +241,10 @@ class TieredExecutor:
         """Wrap a demoted table in the row-granular serving facade when
         it belongs to the host store (the int8 dequant-on-gather facade
         under ``embed_store='int8'``); device_put it when its tier has a
-        real memory kind; pass through otherwise."""
+        real memory kind; pass through otherwise.  With ``cache_rows``
+        set, the host-store facade gains a device-resident
+        ``HotRowCache`` front (LFU hot set; fills ride the same async
+        H2D dispatch as ``fetch``)."""
         tier = self._demoted_tier(name)
         if tier is None:
             return table
@@ -244,8 +252,26 @@ class TieredExecutor:
         if sh is not None:
             return jax.device_put(table, sh)
         if self.embed_store == "int8" and getattr(table, "ndim", 0) == 2:
-            return QuantizedHostResident(table)
-        return HostResident(table)
+            facade = QuantizedHostResident(table)
+        else:
+            facade = HostResident(table)
+        if self.cache_rows > 0:
+            from repro.memory.cache import HotRowCache
+            facade = HotRowCache(facade, self.cache_rows)
+            self.caches[name] = facade
+        return facade
+
+    def prefetch_rows(self, name: str, ids) -> None:
+        """Warm a serving table's hot-row cache with the given row ids
+        (no-op for uncached tables)."""
+        cache = self.caches.get(name)
+        if cache is not None:
+            cache.prefill(ids)
+
+    def cache_stats(self) -> dict[str, dict]:
+        """Per-table hit/miss/bytes-streamed counters for the serving
+        caches this executor handed out."""
+        return {name: c.stats.to_dict() for name, c in self.caches.items()}
 
     def store_nbytes(self, name: str) -> int | None:
         """Actual host-store bytes of a quantized table (q + scales), or
@@ -262,5 +288,14 @@ class TieredExecutor:
             else "host-store"
         store = f" embed_store=int8({len(self._int8)})" \
             if self.embed_store == "int8" else ""
+        cache = ""
+        if self.caches:
+            parts = []
+            for name, c in self.caches.items():
+                s = c.stats
+                parts.append(f"{name}: rows={c.rows} "
+                             f"hit_rate={s.hit_rate:.2f} "
+                             f"streamed={s.bytes_streamed}B")
+            cache = f" cache[{'; '.join(parts)}]"
         return (f"TieredExecutor[{self.topology.name}] "
-                f"demoted={len(demoted)} ({mode}){store}")
+                f"demoted={len(demoted)} ({mode}){store}{cache}")

@@ -125,13 +125,20 @@ def derive_eval_batch(free_hbm: int, out_dim: int, k: int, item_block: int,
 
 
 def serving_profiles(user_nbytes: int, item_nbytes: int, row: int,
-                     user_fraction: float = 0.05) -> list[AccessProfile]:
+                     user_fraction: float = 0.05,
+                     cache_rows: int = 0) -> list[AccessProfile]:
     """AccessProfiles for the serving snapshot: every query batch streams
     the full item table block-by-block (read 1.0×/step), but gathers only
     the batch's rows of the user table (``user_fraction``×/step) — so
     under a tight budget the planner demotes the user table first,
-    mirroring RecNMP's observation that item-side traffic dominates."""
-    return [
+    mirroring RecNMP's observation that item-side traffic dominates.
+
+    ``cache_rows`` prices the hot-row cache's device slots against the
+    fast tier (a pinned-fast reservation: slot store + per-slot
+    bookkeeping, priced at 2 rows/slot) — the knapsack sees the cache
+    budget as spent and may legitimately demote a table the cache then
+    serves."""
+    profs = [
         AccessProfile("serve/user_embed", int(user_nbytes),
                       reads_per_step=user_fraction, writes_per_step=0.0,
                       access_size=row),
@@ -139,6 +146,12 @@ def serving_profiles(user_nbytes: int, item_nbytes: int, row: int,
                       reads_per_step=1.0, writes_per_step=0.0,
                       access_size=row),
     ]
+    if cache_rows > 0:
+        profs.append(AccessProfile("serve/hot_cache",
+                                   int(2 * cache_rows * row),
+                                   reads_per_step=0.0, writes_per_step=0.0,
+                                   access_size=row, pinned="fast"))
+    return profs
 
 
 @dataclasses.dataclass

@@ -162,3 +162,118 @@ def test_custom_vjp_matches_plain_autodiff_of_ref():
 
     np.testing.assert_allclose(jax.grad(via_custom)(x),
                                jax.grad(via_dense)(x), rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------- fused serving kernel
+def _fused_both(ue, ie, seen, mask, k, blk):
+    """(xla-ref, pallas-interpret) results of the fused serving kernel."""
+    from repro.kernels import ops as kops
+    ni = ie.shape[0]
+    a = kops.fused_topk_score(jnp.asarray(ue), jnp.asarray(ie),
+                              jnp.asarray(seen), jnp.asarray(mask),
+                              k=k, n_items=ni, item_block=blk, impl="xla")
+    b = kops.fused_topk_score(jnp.asarray(ue), jnp.asarray(ie),
+                              jnp.asarray(seen), jnp.asarray(mask),
+                              k=k, n_items=ni, item_block=blk, impl="pallas")
+    return a, b
+
+
+def _streamed_reference(ue, ie, seen, mask, k, blk):
+    """The pre-fused streamed sweep as oracle: block-major _merge_block
+    calls over the same block schedule (bit-exact tie contract)."""
+    from repro.eval import topk as streaming
+    b_users = ue.shape[0]
+    ni = ie.shape[0]
+    carry_s = jnp.full((b_users, k), -np.inf, jnp.float32)
+    carry_i = jnp.full((b_users, k), -1, jnp.int32)
+    for b0 in range(0, -(-ni // blk) * blk, blk):
+        ids_np = np.arange(b0, b0 + blk)
+        valid = ids_np < ni
+        block_ids = jnp.asarray(np.where(valid, ids_np, -1).astype(np.int32))
+        ie_blk = jnp.asarray(ie[np.where(valid, ids_np, 0)])
+        carry_s, carry_i = streaming._merge_block(
+            jnp.asarray(ue), ie_blk, block_ids, jnp.asarray(seen),
+            jnp.asarray(mask), jnp.int32(b0), carry_s, carry_i, k=k)
+    return np.asarray(carry_s), np.asarray(carry_i)
+
+
+@pytest.mark.parametrize("case", [
+    "integer_ties",      # many exactly-equal scores -> id-asc order
+    "neg_zero",          # -0.0 scores must canonicalize to +0.0
+    "k_gt_catalogue",    # K > I: tail slots are (-inf, -1)
+    "fully_masked",      # a user with every item seen
+    "ragged_d",          # D % 128 != 0, B % tile != 0, I % blk != 0
+    "empty_seen",        # zero-width seen CSR
+])
+def test_fused_kernel_adversarial_parity(case):
+    rng = np.random.default_rng(abs(hash(case)) % 2**31)
+    b, ni, d, k, blk, L = 9, 37, 12, 5, 8, 4
+    ue = rng.integers(-2, 3, (b, d)).astype(np.float32)
+    ie = rng.integers(-2, 3, (ni, d)).astype(np.float32)
+    seen = rng.integers(0, ni, (b, L)).astype(np.int32)
+    mask = rng.random((b, L)) < 0.5
+    if case == "integer_ties":
+        ie = np.repeat(ie[: ni // 3 + 1], 3, axis=0)[:ni]  # duplicate rows
+    elif case == "neg_zero":
+        ue = np.full((b, d), -1.0, np.float32)
+        ie[::2] = 0.0                       # (-1)·0 = -0.0 pre-canonical
+    elif case == "k_gt_catalogue":
+        ni, k = 6, 11
+        ie = ie[:ni]
+        seen = np.minimum(seen, ni - 1)
+    elif case == "fully_masked":
+        ni, L = 6, 6
+        ie = ie[:ni]
+        seen = np.broadcast_to(np.arange(ni, dtype=np.int32), (b, ni)).copy()
+        mask = np.ones((b, ni), bool)       # every candidate masked
+    elif case == "ragged_d":
+        d, b, blk = 130, 7, 5               # nothing divides anything
+        ue = rng.integers(-2, 3, (b, d)).astype(np.float32)
+        ie = rng.integers(-2, 3, (ni, d)).astype(np.float32)
+        seen = seen[:b]
+        mask = mask[:b]
+    elif case == "empty_seen":
+        seen = np.zeros((b, 0), np.int32)
+        mask = np.zeros((b, 0), bool)
+    (s_x, i_x), (s_p, i_p) = _fused_both(ue, ie, seen, mask, k, blk)
+    s_ref, i_ref = _streamed_reference(ue, ie, seen, mask, k, blk)
+    np.testing.assert_array_equal(np.asarray(s_x), s_ref)
+    np.testing.assert_array_equal(np.asarray(i_x), i_ref)
+    np.testing.assert_array_equal(np.asarray(s_p), s_ref)
+    np.testing.assert_array_equal(np.asarray(i_p), i_ref)
+    if case == "fully_masked":
+        assert (np.asarray(i_x) == -1).all()
+        assert np.isneginf(np.asarray(s_x)).all()
+    if case == "k_gt_catalogue":
+        assert (np.asarray(i_x)[:, ni:] == -1).all()
+        assert np.isneginf(np.asarray(s_x)[:, ni:]).all()
+
+
+@pytest.mark.parametrize("embed_store", ["fp32", "int8"])
+def test_cache_on_off_bit_identity_sweep(embed_store):
+    """Randomized serving sweeps: cache-enabled recommendations are
+    bit-identical to cache-off for every placement/store combination."""
+    from repro.eval.recommender import Recommender
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        nu, ni, d = int(rng.integers(5, 40)), int(rng.integers(5, 50)), 8
+        ue = rng.integers(-3, 4, (nu, d)).astype(np.float32)
+        ie = rng.integers(-3, 4, (ni, d)).astype(np.float32)
+        ne = int(rng.integers(0, nu * 3))
+        user = np.sort(rng.integers(0, nu, ne))
+        item = rng.integers(0, ni, ne)
+        indptr = np.searchsorted(user, np.arange(nu + 1)).astype(np.int64)
+        kw = dict(seen_indptr=indptr, seen_items=item.astype(np.int64),
+                  k=int(rng.integers(1, 9)), user_batch=4,
+                  topology="uniform", embed_store=embed_store,
+                  pins={"serve/user_embed": "slow",
+                        "serve/item_embed": "slow"})
+        plain = Recommender(ue, ie, **kw)
+        cached = Recommender(ue, ie, cache_rows=int(rng.integers(1, 16)),
+                             **kw)
+        for _ in range(3):
+            q = rng.integers(0, nu, int(rng.integers(1, 20)))
+            i0, s0 = plain.recommend(q)
+            i1, s1 = cached.recommend(q)
+            np.testing.assert_array_equal(i0, i1)
+            np.testing.assert_array_equal(s0, s1)

@@ -1,0 +1,317 @@
+"""Serving hot-path tests (fast tier): fused-kernel routing, the
+block-major staging fix, uniform user-id validation, the HotRowCache,
+its planner pricing, ServeCfg, and the BENCH artifact plumbing.
+
+All equality checks are exact (integer-valued embeddings make f32 dot
+products exact), so "bit-identical" below means assert_array_equal."""
+import json
+
+import numpy as np
+import pytest
+
+import benchmarks.common as bench_common
+from repro.api import ExperimentSpec, ServeCfg
+from repro.eval.recommender import Recommender
+from repro.eval.topk import streaming_topk, validate_user_ids
+from repro.kernels import ops as kops
+from repro.memory import (CacheStats, HostResident, HotRowCache,
+                          QuantizedHostResident, TieredExecutor, get_policy,
+                          get_topology)
+from repro.pipeline.plan import serving_profiles
+
+
+def _tables(seed=0, nu=30, ni=50, d=16):
+    rng = np.random.default_rng(seed)
+    ue = rng.integers(-4, 5, (nu, d)).astype(np.float32)
+    ie = rng.integers(-4, 5, (ni, d)).astype(np.float32)
+    ne = nu * 3
+    user = rng.integers(0, nu, ne)
+    item = rng.integers(0, ni, ne)
+    order = np.lexsort((item, user))
+    user, item = user[order], item[order]
+    indptr = np.searchsorted(user, np.arange(nu + 1))
+    return ue, ie, indptr.astype(np.int64), item.astype(np.int64)
+
+
+# ----------------------------------------------------------- fused routing
+def test_fused_auto_matches_unfused_bitwise():
+    ue, ie, indptr, items = _tables()
+    kw = dict(seen_indptr=indptr, seen_items=items, user_batch=7,
+              item_block=16)
+    s_auto, i_auto = streaming_topk(ue, ie, 5, **kw)            # auto-fused
+    s_off, i_off = streaming_topk(ue, ie, 5, fused=False, **kw)
+    s_on, i_on = streaming_topk(ue, ie, 5, fused=True, **kw)
+    np.testing.assert_array_equal(i_auto, i_off)
+    np.testing.assert_array_equal(s_auto, s_off)
+    np.testing.assert_array_equal(i_auto, i_on)
+    np.testing.assert_array_equal(s_auto, s_on)
+
+
+def test_fused_pallas_matches_xla():
+    ue, ie, indptr, items = _tables(seed=3)
+    a = streaming_topk(ue, ie, 6, seen_indptr=indptr, seen_items=items,
+                       item_block=16, impl="xla")
+    b = streaming_topk(ue, ie, 6, seen_indptr=indptr, seen_items=items,
+                       item_block=16, impl="pallas")
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_fused_requires_device_resident_items():
+    ue, ie, *_ = _tables()
+    with pytest.raises(ValueError, match="fused"):
+        streaming_topk(ue, HostResident(ie), 5, fused=True)
+    # auto mode silently falls back to the block-major streamed sweep
+    s, i = streaming_topk(ue, HostResident(ie), 5)
+    s2, i2 = streaming_topk(ue, ie, 5, fused=False)
+    np.testing.assert_array_equal(i, i2)
+    np.testing.assert_array_equal(s, s2)
+
+
+# -------------------------------------------------- block staging (bugfix)
+class _CountingHostResident(HostResident):
+    def __init__(self, arr):
+        super().__init__(arr)
+        self.block_calls = 0
+        self.take_calls = 0
+
+    def take(self, ids):
+        self.take_calls += 1
+        return super().take(ids)
+
+    def block(self, ids):
+        self.block_calls += 1
+        return super().block(ids)
+
+
+def test_item_blocks_stream_once_per_sweep():
+    """Regression: item blocks used to be re-uploaded once per user
+    batch (Q× the catalogue bytes per sweep)."""
+    ue, ie, indptr, items = _tables(nu=20, ni=50)
+    host = _CountingHostResident(ie)
+    n_blocks = -(-50 // 16)
+    s, i = streaming_topk(ue, host, 5, seen_indptr=indptr, seen_items=items,
+                          user_batch=3, item_block=16)   # 7 user batches
+    assert host.block_calls == n_blocks                  # NOT 7 * n_blocks
+    s2, i2 = streaming_topk(ue, ie, 5, seen_indptr=indptr, seen_items=items,
+                            user_batch=3, item_block=16, fused=False)
+    np.testing.assert_array_equal(i, i2)
+    np.testing.assert_array_equal(s, s2)
+
+
+def test_device_gathers_once_per_block(monkeypatch):
+    """Same fix on the device-resident unfused path, counted in kernel
+    dispatches: one item gather per block + one user gather per batch."""
+    ue, ie, indptr, items = _tables(nu=20, ni=50)
+    calls = []
+    orig = kops.embedding_bag
+
+    def counting(*a, **kw):
+        calls.append(a[1].shape)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr("repro.eval.topk.kops.embedding_bag", counting)
+    streaming_topk(ue, ie, 5, seen_indptr=indptr, seen_items=items,
+                   user_batch=3, item_block=16, fused=False)
+    n_user_batches, n_blocks = 7, -(-50 // 16)
+    assert len(calls) == n_user_batches + n_blocks
+
+
+# ------------------------------------------------------ id validation
+def test_user_id_validation_uniform_across_placements():
+    ue, ie, indptr, items = _tables()
+    fast = Recommender(ue, ie, seen_indptr=indptr, seen_items=items, k=5,
+                       topology="uniform")
+    demoted = Recommender(ue, ie, seen_indptr=indptr, seen_items=items, k=5,
+                          topology="uniform",
+                          pins={"serve/user_embed": "slow",
+                                "serve/item_embed": "slow"})
+    assert demoted.n_offloaded == 2
+    for bad in ([-1], [ue.shape[0]], [0, -7], [2**31 - 1]):
+        for rec in (fast, demoted):
+            with pytest.raises(ValueError, match="out of range"):
+                rec.recommend(np.asarray(bad))
+    # valid ids agree bit-for-bit between the two placements
+    q = np.asarray([0, 3, 29, 3])
+    i_f, s_f = fast.recommend(q)
+    i_d, s_d = demoted.recommend(q)
+    np.testing.assert_array_equal(i_f, i_d)
+    np.testing.assert_array_equal(s_f, s_d)
+    with pytest.raises(ValueError):
+        validate_user_ids(np.asarray([5]), 5)
+    validate_user_ids(np.asarray([], np.int32), 0)       # empty is fine
+
+
+# ------------------------------------------------------------- HotRowCache
+def test_cache_counters_and_bit_identity():
+    rng = np.random.default_rng(2)
+    tab = rng.standard_normal((40, 8)).astype(np.float32)
+    cache = HotRowCache(HostResident(tab), rows=4)
+    ids = np.asarray([1, 5, 1, 9, 5])
+    out = cache.take(ids)
+    np.testing.assert_array_equal(out, tab[ids])
+    # distinct-rows accounting: 3 distinct rows, all cold
+    assert (cache.stats.hits, cache.stats.misses) == (0, 3)
+    assert cache.stats.bytes_streamed == 3 * 8 * 4
+    out = cache.take(ids)
+    np.testing.assert_array_equal(out, tab[ids])
+    assert (cache.stats.hits, cache.stats.misses) == (3, 3)
+    assert cache.stats.hit_rate == 0.5
+    assert cache.resident_rows == 3
+
+
+def test_cache_lfu_admission_and_eviction():
+    tab = np.arange(60, dtype=np.float32).reshape(20, 3)
+    cache = HotRowCache(HostResident(tab), rows=2)
+    cache.take([0]); cache.take([0]); cache.take([1])     # freq 0:2, 1:1
+    assert cache.resident_rows == 2
+    # a one-shot scan row (freq 1) must not displace row 1 (freq 1):
+    # admission needs *strictly* higher frequency
+    cache.take([2])
+    assert cache.stats.evictions == 0
+    np.testing.assert_array_equal(cache.take([2]), tab[[2]])  # still correct
+    # row 2 now at freq 2 > row 1's freq 1 -> deterministic eviction
+    cache.take([2])
+    assert cache.stats.evictions == 1
+    assert cache._slot_of[1] == -1 and cache._slot_of[2] >= 0
+
+
+def test_cache_capacity_clamp_and_prefill():
+    tab = np.ones((5, 4), np.float32)
+    cache = HotRowCache(HostResident(tab), rows=100)
+    assert cache.rows == 5                                # clamped to table
+    cache.prefill(np.arange(5))
+    assert cache.resident_rows == 5
+    assert (cache.stats.hits, cache.stats.misses) == (0, 0)  # not traffic
+    cache.take([0, 4])
+    assert cache.stats.misses == 0 and cache.stats.hits == 2
+
+
+def test_cache_over_quantized_backing_bit_identical():
+    rng = np.random.default_rng(5)
+    tab = rng.standard_normal((30, 8)).astype(np.float32)
+    q = QuantizedHostResident(tab)
+    cache = HotRowCache(q, rows=8)
+    ids = np.asarray([3, 7, 3, 11])
+    first = cache.take(ids)
+    np.testing.assert_array_equal(first, q.take(ids))     # dequant bits
+    np.testing.assert_array_equal(cache.take(ids), first)  # cached == fresh
+
+
+def test_recommender_cache_on_equals_off():
+    ue, ie, indptr, items = _tables(seed=7, nu=40, ni=60)
+    kw = dict(seen_indptr=indptr, seen_items=items, k=6, user_batch=8,
+              topology="uniform", pins={"serve/user_embed": "slow"})
+    plain = Recommender(ue, ie, **kw)
+    cached = Recommender(ue, ie, cache_rows=16, **kw)
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        q = rng.integers(0, 40, 24)
+        i0, s0 = plain.recommend(q)
+        i1, s1 = cached.recommend(q)
+        np.testing.assert_array_equal(i0, i1)
+        np.testing.assert_array_equal(s0, s1)
+    stats = cached.cache_stats()["serve/user_embed"]
+    assert stats["hits"] > 0 and stats["bytes_streamed"] > 0
+    assert "cache[" in cached.describe()
+    assert "item_embed->" in cached.describe()
+    assert plain.cache_stats() == {}
+
+
+# ------------------------------------------------------------ plan pricing
+def test_cache_rows_priced_against_fast_tier():
+    profs = serving_profiles(1000, 1000, row=128, cache_rows=10)
+    names = [p.name for p in profs]
+    assert names == ["serve/user_embed", "serve/item_embed",
+                     "serve/hot_cache"]
+    cache_prof = profs[-1]
+    assert cache_prof.pinned == "fast"
+    assert cache_prof.nbytes == 2 * 10 * 128
+    plan = get_policy("greedy")(profs, get_topology("uniform"))
+    assert plan.is_fast("serve/hot_cache")
+    assert plan.hbm_used >= cache_prof.nbytes
+    # cache_rows=0 keeps the exact legacy profile set
+    assert [p.name for p in serving_profiles(1000, 1000, row=128)] == \
+        ["serve/user_embed", "serve/item_embed"]
+
+
+def test_cache_reservation_can_demote_a_table():
+    # fast budget fits both tables OR one table + the cache, not all
+    ue, ie, *_ = _tables(nu=16, ni=16, d=16)
+    budget = ue.nbytes + ie.nbytes + 256
+    with_cache = Recommender(ue, ie, hbm_budget=budget, topology="uniform",
+                             cache_rows=16)
+    assert with_cache.plan.is_fast("serve/hot_cache")
+    assert with_cache.n_offloaded >= 1                  # something demoted
+    without = Recommender(ue, ie, hbm_budget=budget, topology="uniform")
+    assert without.n_offloaded == 0
+
+
+def test_executor_cache_stats_and_describe():
+    profs = serving_profiles(400, 400, row=16, cache_rows=4)
+    plan = get_policy("greedy")(profs, get_topology("uniform"),
+                                pins={"serve/item_embed": "slow"})
+    ex = TieredExecutor(plan, prefixes=(), cache_rows=4)
+    table = np.ones((25, 4), np.float32)
+    placed = ex.host_table("serve/item_embed", table)
+    assert isinstance(placed, HotRowCache)
+    placed.take([1, 2])
+    ex.prefetch_rows("serve/item_embed", [3])
+    ex.prefetch_rows("no-such-table", [0])               # no-op
+    stats = ex.cache_stats()["serve/item_embed"]
+    assert stats["misses"] == 2 and stats["fills"] == 3
+    assert "cache[" in ex.describe()
+    with pytest.raises(ValueError, match="cache_rows"):
+        TieredExecutor(plan, cache_rows=-1)
+
+
+# ----------------------------------------------------------------- ServeCfg
+def test_serve_cfg_round_trip_and_validation():
+    spec = ExperimentSpec(serve=ServeCfg(cache_rows=128, fused=True))
+    again = ExperimentSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.serve.cache_rows == 128 and again.serve.fused is True
+    assert ExperimentSpec().serve == ServeCfg()          # identity default
+    spec2 = spec.override({"serve.cache_rows": 0, "serve.fused": None})
+    assert spec2.serve == ServeCfg()
+    with pytest.raises(ValueError, match="cache_rows"):
+        ServeCfg(cache_rows=-5)
+    with pytest.raises(ValueError, match="unknown"):
+        ExperimentSpec.from_dict({"serve": {"bogus": 1}})
+
+
+# --------------------------------------------------------- BENCH artifacts
+def test_write_bench_json_emits_root_and_mirror(tmp_path, monkeypatch):
+    root = tmp_path / "repo"
+    results = tmp_path / "repo" / "results"
+    root.mkdir()
+    monkeypatch.setattr(bench_common, "REPO_ROOT", str(root))
+    monkeypatch.setattr(bench_common, "BENCH_DIR", str(results))
+    path = bench_common.write_bench_json("demo", "sec_a", {"x": 1})
+    bench_common.write_bench_json("demo", "sec_b", {"y": 2})
+    assert path == str(root / "BENCH_demo.json")
+    for p in (root / "BENCH_demo.json", results / "BENCH_demo.json"):
+        data = json.loads(p.read_text())
+        # sections merge instead of clobbering
+        assert data == {"sec_a": {"x": 1}, "sec_b": {"y": 2}}
+
+
+def test_serving_bench_artifact_is_committed_and_shows_wins():
+    """The root-level BENCH_serving.json perf-trajectory artifact exists
+    and records the fused+cached arm beating the unfused baseline."""
+    import os
+    path = os.path.join(bench_common.REPO_ROOT, "BENCH_serving.json")
+    with open(path) as f:
+        data = json.load(f)["power_law_stream"]
+    assert data["fused_speedup_p50"] > 1.0
+    assert data["fused_cached_vs_unfused_p50"] > 1.0
+    assert 0.0 < data["fused_cached"]["hit_rate"] <= 1.0
+    assert data["cache_bytes_saved_frac"] > 0.0
+
+
+def test_cache_stats_dataclass():
+    s = CacheStats()
+    assert s.hit_rate == 0.0
+    s.hits, s.misses = 3, 1
+    assert s.hit_rate == 0.75
+    assert s.to_dict()["hit_rate"] == 0.75
