@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-fast test-slow test-multidevice check-plan bench-smoke bench train-smoke examples check-bytecode
+.PHONY: test test-fast test-slow test-multidevice check-plan lint audit bench-smoke bench train-smoke examples check-bytecode
 
 # tier-1 suite (the CI gate) + pass/fail delta vs the seed baseline,
 # then the placement-plan golden-snapshot gate (per-topology)
@@ -12,6 +12,17 @@ test:
 # placement-plan golden snapshots only (tools/plan_snapshots.json)
 check-plan:
 	$(PY) tools/check_plan_snapshot.py
+
+# layer 1 static analysis (AST + registry rules) vs the ratchet baseline
+# (tools/lint_baseline.json); fix new findings, shrink with --update
+lint:
+	$(PY) tools/lint.py --check-baseline
+
+# layer 2 HLO invariant audit: lowers train + serve for the smoke
+# preset at 4 (mesh, compression) points and checks dtype/placement/
+# collective invariants on the lowered text
+audit:
+	$(PY) tools/lint.py --hlo
 
 # fast subset: skip slow property/parity sweeps + multi-device subprocess tests
 test-fast:

@@ -1,0 +1,35 @@
+"""repro.analysis — static analysis for the repro codebase.
+
+Two layers (paper motivation: the §5-§6 placement and write-policy wins
+evaporate from a single accidental host sync or dtype widening, so we
+catch those bug classes *before* a benchmark regresses):
+
+  Layer 1 — AST lint, no JAX import needed.
+    ``rules``       per-module JAX-aware rules (tracer safety, PRNG
+                    hygiene, f64 hazards, Pallas kernel rules);
+    ``repo_rules``  cross-file registry-completeness rules (kernel
+                    oracles, spec sections, topology snapshots);
+    ``baseline``    the ratchet (tools/lint_baseline.json).
+
+  Layer 2 — HLO invariant auditor (imports JAX; import it explicitly):
+    ``repro.analysis.hlo_audit`` lowers the jitted train step and the
+    serve path for representative presets and asserts on the lowered
+    text — no f64, no host transfers, collectives present/absent
+    exactly per MeshCfg/CompressionCfg, and a recompile-hazard count.
+
+Driven by ``tools/lint.py`` (``make lint`` / ``make audit``); rule docs
+in ``docs/ARCHITECTURE.md`` ("Static analysis").
+
+This package intentionally does NOT import ``hlo_audit`` here: Layer 1
+must stay importable (and fast) in environments and CI steps that never
+touch JAX.
+"""
+from repro.analysis.baseline import compare, load_baseline, save_baseline
+from repro.analysis.repo_rules import REPO_RULES, lint_repo
+from repro.analysis.rules import RULES, Finding, lint_paths, lint_source
+
+ALL_RULES = {**RULES, **REPO_RULES}
+
+__all__ = ["Finding", "RULES", "REPO_RULES", "ALL_RULES", "lint_source",
+           "lint_paths", "lint_repo", "load_baseline", "save_baseline",
+           "compare"]

@@ -1,0 +1,181 @@
+"""Layer 1b — registry-completeness rules (cross-file, AST + JSON only).
+
+PRs 1-7 grew several registries whose invariants were only enforced by
+hand-written tests that new entries can silently bypass:
+
+  * every ``kernels/ops.py`` dispatch entry needs a ``kernels/ref.py``
+    oracle (the allclose ground truth) and coverage in
+    ``tests/test_kernel_parity.py``;
+  * every ``*Cfg`` dataclass in ``api/spec.py`` must be registered in
+    ``_SECTIONS`` (or ``from_dict`` silently drops it) and exercised by
+    a round-trip test somewhere under ``tests/``;
+  * every registered ``TierTopology`` preset needs its golden arms
+    (``<name>`` and ``<name>@int8``) in ``tools/plan_snapshots.json`` or
+    ``tools/check_plan_snapshot.py`` has nothing to ratchet against.
+
+These rules cross-check the *files* — no JAX import, no registry
+execution — so adding a kernel without an oracle fails ``make lint``
+before any benchmark can regress.
+
+Rule catalogue:
+
+  reg-kernel-oracle       ops.py dispatch def without a ``<name>_ref``
+                          oracle in ref.py.
+  reg-kernel-parity-test  ops.py dispatch def never referenced in
+                          tests/test_kernel_parity.py.
+  reg-spec-section        a ``*Cfg`` dataclass in api/spec.py missing
+                          from the ``_SECTIONS`` table.
+  reg-spec-roundtrip      a ``*Cfg`` dataclass never referenced by name
+                          under tests/ (no round-trip coverage).
+  reg-topology-snapshot   a registered topology preset without its
+                          fp32 or @int8 golden arm in plan_snapshots.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import pathlib
+
+from repro.analysis.rules import Finding
+
+__all__ = ["REPO_RULES", "lint_repo"]
+
+REPO_RULES = {
+    "reg-kernel-oracle": "kernels/ops.py dispatch entry without a "
+                         "kernels/ref.py oracle",
+    "reg-kernel-parity-test": "kernels/ops.py dispatch entry not covered "
+                              "by tests/test_kernel_parity.py",
+    "reg-spec-section": "*Cfg dataclass in api/spec.py missing from "
+                        "_SECTIONS",
+    "reg-spec-roundtrip": "*Cfg dataclass with no test referencing it "
+                          "under tests/",
+    "reg-topology-snapshot": "registered TierTopology preset without its "
+                             "golden plan-snapshot arm",
+}
+
+# registry surfaces, relative to the repo root
+_OPS = "src/repro/kernels/ops.py"
+_REF = "src/repro/kernels/ref.py"
+_PARITY = "tests/test_kernel_parity.py"
+_SPEC = "src/repro/api/spec.py"
+_TOPOLOGY = "src/repro/memory/topology.py"
+_SNAPSHOTS = "tools/plan_snapshots.json"
+_TESTS_DIR = "tests"
+
+
+def _parse(root: pathlib.Path, rel: str) -> ast.Module:
+    return ast.parse((root / rel).read_text(), filename=rel)
+
+
+def _top_level_defs(tree: ast.Module) -> dict[str, int]:
+    return {n.name: n.lineno for n in tree.body
+            if isinstance(n, ast.FunctionDef)}
+
+
+def _finding(rule: str, rel: str, line: int, message: str) -> Finding:
+    # registry findings fingerprint on the message, not a source line:
+    # they describe a missing thing, so there is no offending line text
+    return Finding(rule, rel, line, 0, message, message)
+
+
+def _kernel_rules(root: pathlib.Path) -> list[Finding]:
+    out: list[Finding] = []
+    ops = _top_level_defs(_parse(root, _OPS))
+    dispatch = {name: line for name, line in ops.items()
+                if not name.startswith("_")}
+    oracles = set(_top_level_defs(_parse(root, _REF)))
+    parity_src = (root / _PARITY).read_text()
+    for name, line in sorted(dispatch.items()):
+        if f"{name}_ref" not in oracles:
+            out.append(_finding(
+                "reg-kernel-oracle", _OPS, line,
+                f"dispatch `{name}` has no `{name}_ref` oracle in "
+                f"{_REF}"))
+        if name not in parity_src:
+            out.append(_finding(
+                "reg-kernel-parity-test", _OPS, line,
+                f"dispatch `{name}` is never referenced in {_PARITY}"))
+    return out
+
+
+def _spec_rules(root: pathlib.Path) -> list[Finding]:
+    out: list[Finding] = []
+    tree = _parse(root, _SPEC)
+    cfgs = {n.name: n.lineno for n in tree.body
+            if isinstance(n, ast.ClassDef) and n.name.endswith("Cfg")}
+    section_values: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, ast.Assign) \
+                and any(isinstance(t, ast.Name) and t.id == "_SECTIONS"
+                        for t in node.targets) \
+                and isinstance(node.value, ast.Dict):
+            section_values = {v.id for v in node.value.values
+                              if isinstance(v, ast.Name)}
+    tests_src = "\n".join(p.read_text() for p in
+                          sorted((root / _TESTS_DIR).glob("*.py")))
+    for name, line in sorted(cfgs.items()):
+        if name not in section_values:
+            out.append(_finding(
+                "reg-spec-section", _SPEC, line,
+                f"`{name}` is not registered in _SECTIONS — from_dict "
+                "will silently drop the section"))
+        if name not in tests_src:
+            out.append(_finding(
+                "reg-spec-roundtrip", _SPEC, line,
+                f"`{name}` is never referenced under {_TESTS_DIR}/ — "
+                "no round-trip coverage"))
+    return out
+
+
+def _registered_topologies(tree: ast.Module) -> dict[str, int]:
+    """Preset names from ``register_topology(TierTopology("<name>", ...)``
+    call sites (string-literal first arguments only)."""
+    names: dict[str, int] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        head = node.func
+        if not (isinstance(head, ast.Name)
+                and head.id == "register_topology") and not (
+                isinstance(head, ast.Attribute)
+                and head.attr == "register_topology"):
+            continue
+        for arg in node.args:
+            if isinstance(arg, ast.Call) and arg.args \
+                    and isinstance(arg.args[0], ast.Constant) \
+                    and isinstance(arg.args[0].value, str):
+                names[arg.args[0].value] = node.lineno
+    return names
+
+
+def _topology_rules(root: pathlib.Path) -> list[Finding]:
+    out: list[Finding] = []
+    topos = _registered_topologies(_parse(root, _TOPOLOGY))
+    snap_path = root / _SNAPSHOTS
+    keys = set(json.loads(snap_path.read_text())) if snap_path.exists() \
+        else set()
+    for name, line in sorted(topos.items()):
+        for arm in (name, f"{name}@int8"):
+            if arm not in keys:
+                out.append(_finding(
+                    "reg-topology-snapshot", _TOPOLOGY, line,
+                    f"topology `{name}` has no `{arm}` golden arm in "
+                    f"{_SNAPSHOTS} (run check_plan_snapshot.py "
+                    "--update)"))
+    return out
+
+
+def lint_repo(root: "pathlib.Path | str") -> list[Finding]:
+    """Run every registry-completeness rule against the repo at
+    ``root``.  Surfaces that don't exist are skipped (the rules are
+    repo-shape-specific by design)."""
+    root = pathlib.Path(root)
+    out: list[Finding] = []
+    if (root / _OPS).exists() and (root / _REF).exists() \
+            and (root / _PARITY).exists():
+        out.extend(_kernel_rules(root))
+    if (root / _SPEC).exists() and (root / _TESTS_DIR).is_dir():
+        out.extend(_spec_rules(root))
+    if (root / _TOPOLOGY).exists():
+        out.extend(_topology_rules(root))
+    return sorted(out, key=lambda x: (x.path, x.line, x.rule))

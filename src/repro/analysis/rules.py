@@ -1,0 +1,508 @@
+"""Layer 1 — JAX-aware AST lint (no JAX import required).
+
+The paper's placement/write-policy wins (§5-§6) die from bug classes
+that type checkers don't see: a stray ``.item()`` inside a jitted step
+is a hidden device→host sync, a dtype-less ``jnp.zeros`` silently
+widens to f64 under x64, an unseeded ``np.random`` call makes a
+benchmark unreproducible, and a Python branch on a tracer inside a
+Pallas kernel either fails late or bakes one side in.  These rules
+catch all of that *statically*, from the AST alone, so ``tools/lint.py``
+can run in CI without building a single array.
+
+Rule catalogue (each finding is reported as ``path:line:col: rule:
+message``; fingerprints — ``Finding.key`` — are line-number-free so the
+ratchet baseline survives unrelated edits):
+
+  tracer-item           ``x.item()`` inside a jit/Pallas function —
+                        a forced device→host sync per call.
+  tracer-host-cast      ``float(x)``/``int(x)``/``bool(x)`` on a
+                        traced value inside a jit/Pallas function.
+  tracer-np-call        ``np.*(traced value)`` inside a jit/Pallas
+                        function — numpy concretizes the tracer (sync
+                        or ConcretizationTypeError).
+  prng-unseeded         legacy global-state ``np.random.*`` calls or
+                        ``np.random.default_rng()`` with no seed.
+  prng-key-reuse        the same PRNGKey fed to two or more samplers
+                        without an intervening ``split`` — correlated
+                        streams.
+  f64-dtypeless         dtype-less ``jnp.zeros/ones/empty/full`` (or a
+                        ``jnp.array`` of float literals) in hot-path
+                        code — f64 under x64, weak-type surprises
+                        otherwise.
+  f64-explicit          explicit float64: ``np.float64``,
+                        ``jnp.float64``, ``"float64"`` dtype strings,
+                        ``astype(float)``.
+  pallas-python-branch  Python ``if``/``while`` on a traced (non-static)
+                        value inside a Pallas kernel body.
+  pallas-nonstatic-grid ``grid=`` built from traced (non-static) values.
+
+Static-argument awareness: names listed in ``static_argnames`` of a
+``functools.partial(jax.jit, ...)`` decorator, keyword-only kernel
+parameters, and locals derived only from static names are NOT treated
+as tracers, so ``int(min(item_block, n))`` under
+``static_argnames=("item_block", "n")`` is clean.
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+import dataclasses
+import pathlib
+
+__all__ = ["Finding", "RULES", "lint_source", "lint_paths"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint violation, with a line-number-free baseline fingerprint."""
+    rule: str
+    path: str                 # repo-relative posix path
+    line: int
+    col: int
+    message: str
+    snippet: str              # stripped source line (ratchet fingerprint)
+
+    def key(self) -> str:
+        return f"{self.rule}::{self.path}::{self.snippet}"
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule}: " \
+               f"{self.message}"
+
+
+# rule name -> one-line description (the catalogue `tools/lint.py --rules`
+# prints; tests assert every implemented rule is documented here)
+RULES = {
+    "tracer-item": "`.item()` inside a jit/Pallas function is a forced "
+                   "device->host sync",
+    "tracer-host-cast": "float()/int()/bool() of a traced value inside a "
+                        "jit/Pallas function",
+    "tracer-np-call": "numpy call on a traced value inside a jit/Pallas "
+                      "function (hidden sync / concretization)",
+    "prng-unseeded": "global-state np.random.* call or seedless "
+                     "default_rng() — unreproducible",
+    "prng-key-reuse": "same PRNGKey consumed by >=2 samplers without "
+                      "split() — correlated streams",
+    "f64-dtypeless": "dtype-less jnp array constructor in hot-path code "
+                     "(f64 under x64)",
+    "f64-explicit": "explicit float64 dtype in repo code (fp32-only hot "
+                    "paths)",
+    "pallas-python-branch": "Python if/while on a traced value inside a "
+                            "Pallas kernel",
+    "pallas-nonstatic-grid": "pallas grid= built from traced values "
+                             "(must be static)",
+}
+
+_LEGACY_NP_RANDOM = {
+    "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "choice", "shuffle", "permutation", "uniform", "normal",
+    "standard_normal", "beta", "binomial", "exponential", "gamma",
+    "poisson", "seed",
+}
+_KEY_CONSUMERS_EXEMPT = {"split", "fold_in", "PRNGKey", "key", "key_data",
+                         "wrap_key_data", "clone"}
+_DTYPE_REQUIRED = {"zeros", "ones", "empty", "full"}
+_BUILTINS = set(dir(builtins))
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """Dotted name of an attribute/name chain ('' when not a chain)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding"}
+
+
+def _names_in(node: ast.AST) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _traced_names_in(node: ast.AST) -> set[str]:
+    """Names referenced by ``node`` in tracer *value* position — uses
+    under ``x.shape``/``x.ndim``/``x.dtype``/``len(x)`` are static
+    metadata, not traced values, and don't count."""
+    if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+        return set()
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id == "len" and len(node.args) == 1:
+        return set()
+    if isinstance(node, ast.Name):
+        return {node.id}
+    out: set[str] = set()
+    for child in ast.iter_child_nodes(node):
+        out |= _traced_names_in(child)
+    return out
+
+
+def _const_str_seq(node: ast.AST) -> list[str]:
+    """String constants in a str/tuple/list constant expression."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    return []
+
+
+def _jit_decoration(fn: ast.FunctionDef) -> tuple[bool, set[str]]:
+    """(is_jitted, static_argnames) from the decorator list."""
+    for dec in fn.decorator_list:
+        chain = _attr_chain(dec)
+        if chain in ("jax.jit", "jit"):
+            return True, set()
+        if isinstance(dec, ast.Call):
+            head = _attr_chain(dec.func)
+            if head in ("jax.jit", "jit"):
+                static = set()
+                for kw in dec.keywords:
+                    if kw.arg in ("static_argnames", "static_argnums") \
+                            and kw.arg == "static_argnames":
+                        static |= set(_const_str_seq(kw.value))
+                return True, static
+            if head in ("functools.partial", "partial") and dec.args:
+                inner = _attr_chain(dec.args[0])
+                if inner in ("jax.jit", "jit"):
+                    static = set()
+                    for kw in dec.keywords:
+                        if kw.arg == "static_argnames":
+                            static |= set(_const_str_seq(kw.value))
+                    return True, static
+    return False, set()
+
+
+def _kernel_names(tree: ast.Module) -> set[str]:
+    """Function names passed (directly or through functools.partial) as
+    the kernel argument of a ``pl.pallas_call``/``pallas_call``."""
+    kernels: set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        head = _attr_chain(node.func)
+        if not head.endswith("pallas_call"):
+            continue
+        if not node.args:
+            continue
+        target = node.args[0]
+        if isinstance(target, ast.Call):         # functools.partial(k, ...)
+            phead = _attr_chain(target.func)
+            if phead in ("functools.partial", "partial") and target.args:
+                target = target.args[0]
+        name = _attr_chain(target)
+        if name:
+            kernels.add(name.split(".")[-1])
+    return kernels
+
+
+class _FunctionLinter:
+    """Taint-tracks one function body: which locals derive from traced
+    parameters, then reports tracer-unsafe operations."""
+
+    def __init__(self, fn: ast.FunctionDef, *, jit_ctx: bool,
+                 kernel_ctx: bool, static: set[str], emit):
+        self.fn = fn
+        self.jit_ctx = jit_ctx
+        self.kernel_ctx = kernel_ctx
+        self.emit = emit
+        a = fn.args
+        params = [p.arg for p in
+                  (a.posonlyargs + a.args + ([a.vararg] if a.vararg else []))]
+        # keyword-only params are the closure-bound statics of the
+        # functools.partial kernel idiom (reduce=, rb=, gather=)
+        kwonly = {p.arg for p in a.kwonlyargs}
+        self.dynamic = {p for p in params if p not in static} - kwonly
+        self.static = static | kwonly | _BUILTINS
+
+    def tainted(self, node: ast.AST) -> bool:
+        return bool(_traced_names_in(node) & self.dynamic)
+
+    def run(self) -> None:
+        for stmt in self.fn.body:
+            self._walk(stmt)
+
+    # --------------------------------------------------------------- walk
+    def _walk(self, node: ast.AST) -> None:
+        if isinstance(node, ast.FunctionDef):
+            # nested defs inherit this function's taint context
+            sub = _FunctionLinter(node, jit_ctx=self.jit_ctx,
+                                  kernel_ctx=self.kernel_ctx,
+                                  static=set(), emit=self.emit)
+            sub.dynamic |= self.dynamic
+            sub.run()
+            return
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            self._track_assign(node)
+        if isinstance(node, ast.For) and self.tainted(node.iter):
+            for n in ast.walk(node.target):
+                if isinstance(n, ast.Name):
+                    self.dynamic.add(n.id)
+        if isinstance(node, (ast.If, ast.While)) and self.kernel_ctx \
+                and self.tainted(node.test):
+            self.emit("pallas-python-branch", node.test,
+                      "Python branch on a traced value inside a Pallas "
+                      "kernel — use lax.cond/jnp.where")
+        if isinstance(node, ast.Call):
+            self._check_call(node)
+        for child in ast.iter_child_nodes(node):
+            self._walk(child)
+
+    def _track_assign(self, node) -> None:
+        value = getattr(node, "value", None)
+        if value is None:
+            return
+        taint = self.tainted(value)
+        targets = node.targets if isinstance(node, ast.Assign) \
+            else [node.target]
+        for t in targets:
+            for n in ast.walk(t):
+                if isinstance(n, ast.Name):
+                    if taint:
+                        self.dynamic.add(n.id)
+                    else:
+                        self.dynamic.discard(n.id)
+
+    # -------------------------------------------------------------- calls
+    def _check_call(self, call: ast.Call) -> None:
+        if not (self.jit_ctx or self.kernel_ctx):
+            return
+        func = call.func
+        if isinstance(func, ast.Attribute) and func.attr == "item" \
+                and not call.args and not call.keywords:
+            self.emit("tracer-item", call,
+                      "`.item()` inside a jitted function forces a "
+                      "device->host sync per call")
+            return
+        if isinstance(func, ast.Name) and func.id in ("float", "int",
+                                                      "bool") \
+                and len(call.args) == 1 and self.tainted(call.args[0]):
+            self.emit("tracer-host-cast", call,
+                      f"`{func.id}()` of a traced value inside a jitted "
+                      "function concretizes it (device->host sync)")
+            return
+        chain = _attr_chain(func)
+        if (chain.startswith("np.") or chain.startswith("numpy.")) \
+                and any(self.tainted(a) for a in call.args):
+            self.emit("tracer-np-call", call,
+                      f"`{chain}()` on a traced value inside a jitted "
+                      "function (hidden sync / concretization)")
+
+
+class _ModuleLinter:
+    def __init__(self, tree: ast.Module, src: str, path: str,
+                 hot_path: bool):
+        self.tree = tree
+        self.lines = src.splitlines()
+        self.path = path
+        self.hot_path = hot_path
+        self.findings: list[Finding] = []
+        self.kernels = _kernel_names(tree)
+        # fns jitted at a call/assignment site: f2 = jax.jit(f2_impl)
+        self.jit_wrapped: set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) \
+                    and _attr_chain(node.func) in ("jax.jit", "jit") \
+                    and node.args:
+                name = _attr_chain(node.args[0])
+                if name:
+                    self.jit_wrapped.add(name.split(".")[-1])
+
+    def emit(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        snippet = self.lines[line - 1].strip() if \
+            0 < line <= len(self.lines) else ""
+        self.findings.append(Finding(rule, self.path, line,
+                                     getattr(node, "col_offset", 0),
+                                     message, snippet))
+
+    def run(self) -> list[Finding]:
+        self._module_wide()
+        self._functions(self.tree, outer_jit=False, outer_dynamic=set())
+        return self.findings
+
+    # ----------------------------------------------------- module rules
+    def _module_wide(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                self._check_prng_unseeded(node)
+                self._check_dtypeless(node)
+                self._check_astype_float(node)
+            if isinstance(node, ast.Attribute) \
+                    and node.attr == "float64" \
+                    and _attr_chain(node) in ("np.float64", "numpy.float64",
+                                              "jnp.float64",
+                                              "jax.numpy.float64"):
+                self.emit("f64-explicit", node,
+                          f"explicit {_attr_chain(node)} (hot paths are "
+                          "fp32-only)")
+            if isinstance(node, ast.Call):
+                self._check_f64_string(node)
+        for fn in [n for n in ast.walk(self.tree)
+                   if isinstance(n, ast.FunctionDef)]:
+            self._check_key_reuse(fn)
+
+    def _check_prng_unseeded(self, call: ast.Call) -> None:
+        chain = _attr_chain(call.func)
+        if chain in {f"np.random.{f}" for f in _LEGACY_NP_RANDOM} \
+                | {f"numpy.random.{f}" for f in _LEGACY_NP_RANDOM}:
+            self.emit("prng-unseeded", call,
+                      f"legacy global-state `{chain}()` — seed a "
+                      "`np.random.default_rng(seed)` instead")
+        elif chain.endswith("default_rng") and not call.args \
+                and not call.keywords:
+            self.emit("prng-unseeded", call,
+                      "`default_rng()` without a seed is "
+                      "unreproducible")
+
+    def _check_dtypeless(self, call: ast.Call) -> None:
+        if not self.hot_path:
+            return
+        chain = _attr_chain(call.func)
+        if chain.split(".")[0] not in ("jnp", "jax"):
+            return
+        name = chain.split(".")[-1]
+        if chain.startswith("jax.") and ".numpy." not in f".{chain}.":
+            return
+        has_dtype = any(kw.arg == "dtype" for kw in call.keywords)
+        if name in _DTYPE_REQUIRED:
+            need = 3 if name == "full" else 2
+            if not has_dtype and len(call.args) < need:
+                self.emit("f64-dtypeless", call,
+                          f"`{chain}()` without an explicit dtype "
+                          "(f64 under x64; pass jnp.float32/int32)")
+        elif name == "array" and not has_dtype and len(call.args) < 2 \
+                and call.args:
+            lits = [n for n in ast.walk(call.args[0])
+                    if isinstance(n, ast.Constant)
+                    and isinstance(n.value, float)]
+            if lits:
+                self.emit("f64-dtypeless", call,
+                          "`jnp.array()` of float literals without a "
+                          "dtype (weak-type / f64 hazard)")
+
+    def _check_f64_string(self, call: ast.Call) -> None:
+        """'float64' only counts in dtype position (dtype= kwarg or an
+        astype()/view() argument) — not in arbitrary strings."""
+        def is_f64(node):
+            return isinstance(node, ast.Constant) and node.value == "float64"
+        hits = [kw.value for kw in call.keywords
+                if kw.arg == "dtype" and is_f64(kw.value)]
+        if isinstance(call.func, ast.Attribute) \
+                and call.func.attr in ("astype", "view"):
+            hits += [a for a in call.args if is_f64(a)]
+        for node in hits:
+            self.emit("f64-explicit", node,
+                      "'float64' dtype (hot paths are fp32-only)")
+
+    def _check_astype_float(self, call: ast.Call) -> None:
+        if isinstance(call.func, ast.Attribute) \
+                and call.func.attr == "astype" and len(call.args) == 1 \
+                and isinstance(call.args[0], ast.Name) \
+                and call.args[0].id == "float":
+            self.emit("f64-explicit", call,
+                      "`astype(float)` is float64 — use an explicit "
+                      "32-bit dtype")
+
+    def _check_key_reuse(self, fn: ast.FunctionDef) -> None:
+        key_vars: set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Call):
+                chain = _attr_chain(node.value.func)
+                if chain.endswith("random.PRNGKey") or chain == "PRNGKey":
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            key_vars.add(t.id)
+        if not key_vars:
+            return
+        uses: dict[str, list[ast.Call]] = {k: [] for k in key_vars}
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            parts = chain.split(".")
+            if len(parts) >= 2 and parts[-2] == "random" \
+                    and parts[-1] not in _KEY_CONSUMERS_EXEMPT:
+                for arg in node.args:
+                    if isinstance(arg, ast.Name) and arg.id in key_vars:
+                        uses[arg.id].append(node)
+        for var, calls in uses.items():
+            for call in calls[1:]:
+                self.emit("prng-key-reuse", call,
+                          f"PRNGKey `{var}` already consumed by another "
+                          "sampler — jax.random.split it first")
+
+    # --------------------------------------------------- function rules
+    def _functions(self, scope, *, outer_jit: bool,
+                   outer_dynamic: set[str]) -> None:
+        for node in ast.iter_child_nodes(scope):
+            if isinstance(node, ast.FunctionDef):
+                jit, static = _jit_decoration(node)
+                jit = jit or node.name in self.jit_wrapped or outer_jit
+                kernel = node.name in self.kernels
+                if jit or kernel:
+                    fl = _FunctionLinter(node, jit_ctx=jit,
+                                         kernel_ctx=kernel, static=static,
+                                         emit=self.emit)
+                    fl.dynamic |= outer_dynamic
+                    self._check_grid(node, fl)
+                    # fl.run() walks nested defs itself (they inherit
+                    # the taint context) — do not recurse again here
+                    fl.run()
+                else:
+                    self._functions(node, outer_jit=False,
+                                    outer_dynamic=set())
+            elif isinstance(node, (ast.ClassDef, ast.If, ast.Try,
+                                   ast.With)):
+                self._functions(node, outer_jit=outer_jit,
+                                outer_dynamic=outer_dynamic)
+
+    def _check_grid(self, fn: ast.FunctionDef, fl) -> None:
+        """grid= inside this function must not reference traced names."""
+        if fl is None:
+            return
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            head = _attr_chain(node.func)
+            if not (head.endswith("pallas_call")
+                    or head.endswith("GridSpec")):
+                continue
+            for kw in node.keywords:
+                if kw.arg == "grid" and fl.tainted(kw.value):
+                    self.emit("pallas-nonstatic-grid", kw.value,
+                              "pallas grid derives from a traced value "
+                              "— grids must be static ints")
+
+
+def lint_source(src: str, path: str = "<memory>",
+                hot_path: bool = True) -> list[Finding]:
+    """Lint one module's source text.  ``hot_path`` gates the
+    f64-dtypeless constructor rule (applied to src/ + benchmarks/)."""
+    tree = ast.parse(src, filename=path)
+    return _ModuleLinter(tree, src, path, hot_path).run()
+
+
+def lint_paths(paths, root: "pathlib.Path | str | None" = None
+               ) -> list[Finding]:
+    """Lint every ``*.py`` under ``paths`` (files or directories).
+    Paths in findings are reported relative to ``root`` when given."""
+    root = pathlib.Path(root) if root is not None else None
+    files: list[pathlib.Path] = []
+    for p in map(pathlib.Path, paths):
+        files.extend(sorted(p.rglob("*.py")) if p.is_dir() else [p])
+    findings: list[Finding] = []
+    for f in files:
+        rel = f
+        if root is not None:
+            try:
+                rel = f.resolve().relative_to(pathlib.Path(root).resolve())
+            except ValueError:
+                rel = f
+        findings.extend(lint_source(f.read_text(), rel.as_posix()))
+    return sorted(findings, key=lambda x: (x.path, x.line, x.rule))

@@ -93,7 +93,7 @@ def forward_batched(cfg: GCNConfig, params, src, dst, edge_mask, x, graph_ids,
             x = jax.nn.relu(x)
     # mean readout per graph
     pooled = jax.ops.segment_sum(x, graph_ids, num_segments=n_graphs)
-    cnt = jax.ops.segment_sum(jnp.ones((n,)), graph_ids, num_segments=n_graphs)
+    cnt = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), graph_ids, num_segments=n_graphs)
     return pooled / jnp.maximum(cnt, 1.0)[:, None]
 
 

@@ -106,6 +106,6 @@ def moe_ffn(cfg, x, w):
 def load_balance_loss(gate_logits: jax.Array, topi: jax.Array, e: int):
     """Switch-style aux loss: E * sum_e (frac_tokens_e * mean_prob_e)."""
     probs = jax.nn.softmax(gate_logits, -1)
-    counts = jnp.zeros((e,)).at[topi.reshape(-1)].add(1.0)
+    counts = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(1.0)
     frac = counts / counts.sum()
     return e * jnp.sum(frac * probs.mean(0))

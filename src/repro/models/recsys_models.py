@@ -71,7 +71,7 @@ def deepfm_init(cfg: DeepFMConfig, key):
         "linear": jax.random.normal(k2, (cfg.n_sparse, cfg.vocab)) * 0.01,
         "mlp": _mlp_params(k3, (cfg.n_sparse * cfg.embed_dim,) + cfg.mlp_dims
                            + (1,)),
-        "bias": jnp.zeros(()),
+        "bias": jnp.zeros((), jnp.float32),
     }
 
 
@@ -121,7 +121,7 @@ def xdeepfm_init(cfg: XDeepFMConfig, key):
                            + (1,)),
         "cin": cin,
         "cin_out": jax.random.normal(k5, (sum(cfg.cin_layers), 1)) * 0.1,
-        "bias": jnp.zeros(()),
+        "bias": jnp.zeros((), jnp.float32),
     }
 
 
@@ -174,13 +174,14 @@ def bert4rec_init(cfg: BERT4RecConfig, key):
             "w1": jax.random.normal(kb[4], (d, cfg.d_ff)) * s,
             "w2": jax.random.normal(kb[5], (cfg.d_ff, d)) *
                   (1.0 / jnp.sqrt(cfg.d_ff)),
-            "ln1": jnp.ones((d,)), "ln2": jnp.ones((d,)),
+            "ln1": jnp.ones((d,), jnp.float32),
+            "ln2": jnp.ones((d,), jnp.float32),
         })
     return {
         "item_embed": jax.random.normal(ks[0], (cfg.n_items, d)) * 0.02,
         "pos_embed": jax.random.normal(ks[1], (cfg.seq_len, d)) * 0.02,
         "blocks": blocks,
-        "out_bias": jnp.zeros((cfg.n_items,)),
+        "out_bias": jnp.zeros((cfg.n_items,), jnp.float32),
     }
 
 

@@ -99,7 +99,7 @@ def _gcn_init(key, n_users, n_items, embed_dim, n_layers):
     for l in range(n_layers):
         w = jax.random.normal(keys[2 + l], (embed_dim, embed_dim),
                               jnp.float32) * jnp.sqrt(2.0 / embed_dim)
-        params["layers"].append({"w": w, "b": jnp.zeros((embed_dim,))})
+        params["layers"].append({"w": w, "b": jnp.zeros((embed_dim,), jnp.float32)})
     return params
 
 

@@ -1,0 +1,57 @@
+"""Shared idiom for the repo's gate scripts (``tools/*.py``).
+
+Every gate follows the same contract — stdlib-only startup, ``src/`` on
+the path before any ``repro`` import, an argparse front end whose help
+text is the module docstring, and a FAIL/OK report that exits 1 on any
+failure with a hint about the intentional-change escape hatch
+(``--update`` and friends).  This module is that contract, so
+``check_plan_snapshot.py``, ``check_test_delta.py`` and ``lint.py``
+cannot drift apart in exit-code or output conventions.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+__all__ = ["repo_root", "ensure_src", "tool_file", "make_parser", "report"]
+
+
+def repo_root() -> pathlib.Path:
+    return pathlib.Path(__file__).resolve().parents[1]
+
+
+def ensure_src() -> None:
+    """Put ``src/`` on ``sys.path`` (gates run from a checkout, not an
+    installed package)."""
+    src = str(repo_root() / "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+
+
+def tool_file(name: str) -> pathlib.Path:
+    """A data file living next to the gate scripts (golden snapshots,
+    baselines)."""
+    return repo_root() / "tools" / name
+
+
+def make_parser(doc: str | None) -> argparse.ArgumentParser:
+    """The gates' argparse front end: module docstring as help, shown
+    verbatim."""
+    return argparse.ArgumentParser(
+        description=doc, formatter_class=argparse.RawDescriptionHelpFormatter)
+
+
+def report(title: str, failures: list[str], *, ok: str,
+           hint: str | None = None) -> int:
+    """Print the gate verdict and return its exit code (1 on any
+    failure).  ``hint`` names the intentional-change escape hatch."""
+    if failures:
+        print(f"--- {title}: FAIL ---")
+        for f in failures:
+            print(f"  {f}")
+        if hint:
+            print(f"({hint})")
+        return 1
+    print(ok)
+    return 0

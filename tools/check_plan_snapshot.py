@@ -25,14 +25,14 @@ commit the regenerated file alongside the code change.
 """
 from __future__ import annotations
 
-import argparse
 import json
-import pathlib
 import sys
 
-sys.path.insert(0, str(pathlib.Path(__file__).parents[1] / "src"))
+import _cli
 
-SNAPSHOT_PATH = pathlib.Path(__file__).with_name("plan_snapshots.json")
+_cli.ensure_src()
+
+SNAPSHOT_PATH = _cli.tool_file("plan_snapshots.json")
 
 
 def build_snapshots() -> dict:
@@ -64,7 +64,7 @@ def build_snapshots() -> dict:
 
 
 def main() -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
+    ap = _cli.make_parser(__doc__)
     ap.add_argument("--update", action="store_true",
                     help="rewrite the golden snapshot file")
     args = ap.parse_args()
@@ -93,15 +93,11 @@ def main() -> int:
         if got[topo] != want[topo]:
             diffs = _diff(want[topo], got[topo])
             failures.append(f"topology {topo!r} drifted: " + "; ".join(diffs))
-    if failures:
-        print("--- placement-plan snapshot check: FAIL ---")
-        for f in failures:
-            print(f"  {f}")
-        print("(intentional change? rerun with --update and commit)")
-        return 1
-    print(f"placement-plan snapshots OK ({len(got) - 1} topologies, "
-          f"{got['_profile']['n_tensors']} tensors)")
-    return 0
+    return _cli.report(
+        "placement-plan snapshot check", failures,
+        ok=f"placement-plan snapshots OK ({len(got) - 1} topologies, "
+           f"{got['_profile']['n_tensors']} tensors)",
+        hint="intentional change? rerun with --update and commit")
 
 
 def _diff(want, got, prefix="") -> list[str]:

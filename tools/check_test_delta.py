@@ -10,12 +10,13 @@ are forwarded to pytest (e.g. ``python tools/check_test_delta.py -m
 from __future__ import annotations
 
 import json
-import pathlib
 import re
 import subprocess
 import sys
 
-BASELINE_PATH = pathlib.Path(__file__).with_name("seed_baseline.json")
+import _cli
+
+BASELINE_PATH = _cli.tool_file("seed_baseline.json")
 FIELDS = ("passed", "failed", "skipped", "error")
 
 
