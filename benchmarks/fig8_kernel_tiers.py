@@ -49,12 +49,16 @@ def run(topology: str = "tpu-hbm-host"):
         emit(f"fig8/{preset}/spmm_penalty_s_perGB", 0.0,
              f"{t.demotion_penalty(spmm_prof):.3f}")
 
-    # (2) write-policy table, emitted from a real placement plan (§6)
-    plan = get_policy("paper-recipe")(
-        gnn_recsys_profiles(349_000, 53_000, 250_000, 128, 2), topo)
-    for k, v in sorted(plan.write_policy().items()):
-        emit(f"fig8/write_policy_{k}", 0.0, f"{v} (plan-emitted, "
-             f"topology={topo.name})")
+    # (2) write-policy table, emitted from a real placement plan (§6);
+    # the fused-Hadamard arm has no messages_l* rows to police — the
+    # [E, D] stream the nt-write policy existed for is gone
+    for arm, fused in (("", False), ("fused/", True)):
+        plan = get_policy("paper-recipe")(
+            gnn_recsys_profiles(349_000, 53_000, 250_000, 128, 2,
+                                fused_messages=fused), topo)
+        for k, v in sorted(plan.write_policy().items()):
+            emit(f"fig8/write_policy_{arm}{k}", 0.0, f"{v} (plan-emitted, "
+                 f"topology={topo.name})")
 
     # (3) density -> SpMM locality (same |E|, varying density; paper Fig 8
     # bottom: m-x25 densest = fastest)

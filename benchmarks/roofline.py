@@ -8,6 +8,12 @@ Each cell also gets compressed-collective arms: the collective term
 rescaled by ``CompressionCfg.grads`` wire pricing (int8: ~1/4 bytes,
 topk: ~2*frac bytes), with the re-derived bottleneck and bound-MFU,
 recorded to ``results/BENCH_compression.json``.
+
+NGCF cells additionally get a ``@fused-hadamard`` arm: their analytic
+HBM model (launch/cells.py) carries the per-layer [E, D] message-stream
+bytes as an explicit ``hadamard_msg_hbm_bytes`` meta term, and the
+fused hadamard_spmm route (kernels/hadamard_spmm.py) removes exactly
+that term — the arm re-derives memory_s/bottleneck with it subtracted.
 """
 from __future__ import annotations
 
@@ -79,6 +85,25 @@ def run():
                  f"coll={coll:.4f}s bound={bottleneck} "
                  f"mfu_bound={mfu*100:.1f}% (wire x{ratio:.3f})")
         comp_cells[cell] = arms
+
+    # fused-Hadamard arms: NGCF's [E, D] message bytes drop out of the
+    # memory term when the fused hadamard_spmm route is active
+    for cell, (roof, _, r) in rows.items():
+        msg = r.get("meta", {}).get("hadamard_msg_hbm_bytes")
+        hbm = (r.get("analytic") or {}).get("hbm_bytes")
+        if not msg or not hbm or roof["memory_s"] <= 0:
+            continue
+        mem = roof["memory_s"] * max(hbm - msg, 0.0) / hbm
+        bound_s = max(roof["compute_s"], mem, roof["collective_s"])
+        bottleneck = max(
+            [("compute", roof["compute_s"]), ("memory", mem),
+             ("collective", roof["collective_s"])], key=lambda kv: kv[1])[0]
+        mfu = roof["model_flops"] / (bound_s * r["chips"] * 197e12 + 1e-30)
+        emit(f"roofline/{cell}@fused-hadamard", 0.0,
+             f"m={mem:.4f}s (was {roof['memory_s']:.4f}s) "
+             f"bound={bottleneck} mfu_bound={mfu*100:.1f}% "
+             f"(msg_bytes {msg/1e9:.1f}GB of {hbm/1e9:.1f}GB dropped)")
+
     write_bench_json("compression", "roofline_wire", {
         "wire_byte_ratio": wire, "cells": comp_cells})
     return rows

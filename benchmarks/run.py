@@ -24,6 +24,7 @@ ALL = [
     "table6_fullgraph_vs_subgraph",
     "roofline",
     "serving",
+    "training",
 ]
 
 

@@ -35,6 +35,18 @@ def run():
         gb = sum(p.nbytes for p in prof) / 1e9
         emit(f"table5/fullgraph_footprint_{layers}L_"
              f"{full.model.embed_dim}E_GB", 0.0, f"{gb:.0f}")
+    # NGCF's depth-linear term is dominated by the per-layer [E, D]
+    # message stream — the fused hadamard_spmm route removes it, so the
+    # fused footprint is what actually competes for capacity
+    ngcf = get_preset("ngcf-full")
+    for layers in (1, 2, 3):
+        byts = {fused: sum(p.nbytes for p in gnn_recsys_profiles(
+            ngcf.data.n_users, ngcf.data.n_items, ngcf.data.edges,
+            ngcf.model.embed_dim, layers, fused_messages=fused))
+            for fused in (False, True)}
+        emit(f"table5/ngcf_footprint_{layers}L_{ngcf.model.embed_dim}E_GB",
+             0.0, f"composed={byts[False]/1e9:.0f} fused={byts[True]/1e9:.0f} "
+             f"(msg stream {100*(1-byts[True]/byts[False]):.0f}% of total)")
     # TPU pod capacity: 256 chips x the registered preset's fast tier,
     # plus its host tier
     topo = get_topology("tpu-hbm-host")

@@ -1,0 +1,101 @@
+"""Training-side perf trajectory: per-model train-step timings.
+
+ROADMAP item 4's missing half: serving latency has been tracked since
+PR 7 (``BENCH_serving.json``); this module starts the training-step
+record.  One full BPR train step (forward + backward + Adam update)
+per registry model on the same synthetic bipartite graph:
+
+  lightgcn       — the paper's fastest model (no message stream);
+  gcn            — scalar-message convolution (single fused SpMM/layer);
+  ngcf_composed  — NGCF through the legacy gather-multiply dataflow:
+                   the per-layer [E, D] Hadamard message matrix is
+                   materialized and saved as an autodiff residual;
+  ngcf_fused     — NGCF through the fused hadamard_spmm route with the
+                   rematerializing VJP: the [E, D] matrix never exists.
+
+The fused-vs-composed pair is the headline number
+(``ngcf_fused_speedup``): same graph, same batch, bit-comparable loss
+(pinned by tests/test_pipeline.py), different dataflow.  Results land
+in the root-level ``BENCH_training.json`` perf-trajectory artifact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn, write_bench_json
+from repro.core import bpr
+from repro.data import synth
+from repro.optim import adam
+from repro.pipeline.registry import get_model
+from repro.pipeline.sparse import BipartiteCSR
+
+EDGES = 20000
+DIM = 32
+LAYERS = 2
+BATCH = 1024
+SEED = 0
+
+
+def _make_step(spec, g, opt):
+    @jax.jit
+    def step(params, opt_state, users, pos, neg):
+        def loss_fn(p):
+            ue, ie = spec.forward(p, g, LAYERS)
+            return bpr.bpr_loss(ue, ie, users, pos, neg)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return step
+
+
+def _bench_arm(arch: str, data, hadamard: str = "auto"):
+    spec = get_model(arch)
+    g = BipartiteCSR(data.user, data.item, data.n_users, data.n_items,
+                     hadamard=hadamard)
+    params = spec.init(jax.random.PRNGKey(SEED), data.n_users, data.n_items,
+                       DIM, LAYERS)
+    opt = adam(1e-3)
+    opt_state = opt.init(params)
+    rng = np.random.default_rng(SEED)
+    pick = rng.integers(0, len(data.user), BATCH)
+    users = jnp.asarray(data.user[pick].astype(np.int32))
+    pos = jnp.asarray(data.item[pick].astype(np.int32))
+    neg = jnp.asarray(rng.integers(0, data.n_items, BATCH).astype(np.int32))
+    step = _make_step(spec, g, opt)
+    us = time_fn(step, params, opt_state, users, pos, neg,
+                 warmup=2, iters=5)
+    return {"step_us": us, "impl": g.impl,
+            "messages_materialized": spec.messages_materialized(g)}
+
+
+def run():
+    data = synth.scaled("movielens-10m", EDGES, seed=SEED)
+    payload = {"edges": EDGES, "dim": DIM, "layers": LAYERS,
+               "batch": BATCH, "n_users": data.n_users,
+               "n_items": data.n_items}
+    arms = {"lightgcn": ("lightgcn", "auto"),
+            "gcn": ("gcn", "auto"),
+            "ngcf_composed": ("ngcf", "composed"),
+            "ngcf_fused": ("ngcf", "fused")}
+    for name, (arch, hadamard) in arms.items():
+        res = _bench_arm(arch, data, hadamard)
+        payload[name] = res
+        emit(f"training/{name}_step", res["step_us"],
+             f"impl={res['impl']} "
+             f"messages={'yes' if res['messages_materialized'] else 'no'}")
+    payload["ngcf_fused_speedup"] = (payload["ngcf_composed"]["step_us"]
+                                     / payload["ngcf_fused"]["step_us"])
+    emit("training/ngcf_fused_speedup", 0.0,
+         f"{payload['ngcf_fused_speedup']:.2f}x (composed "
+         f"{payload['ngcf_composed']['step_us']:.0f}us -> fused "
+         f"{payload['ngcf_fused']['step_us']:.0f}us)")
+    write_bench_json("training", "train_step", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -31,6 +31,7 @@ import re
 __all__ = ["HloExpectation", "COLLECTIVES", "FRAGMENTS", "expect",
            "expectation_for", "check_text", "assert_clean",
            "lower_train_step", "lower_serve", "recompile_hazard",
+           "message_shape", "ngcf_message_fragment", "fusion_audit",
            "audit_spec", "smoke_audit"]
 
 # every collective op name XLA can lower for this repo's programs; the
@@ -95,6 +96,27 @@ FRAGMENTS = {
     "grad-combine@topk": HloExpectation("grad-combine@topk",
                                         contains=("all-gather",)),
 }
+
+
+def message_shape(n_edges: int, embed_dim: int) -> str:
+    """The [E, D] message buffer's shape string as XLA prints it — the
+    needle the fused-NGCF fragments look for."""
+    return f"f32[{n_edges},{embed_dim}]"
+
+
+def ngcf_message_fragment(n_edges: int, embed_dim: int, *,
+                          fused: bool) -> HloExpectation:
+    """The graph-shaped half of the fused-NGCF contract, built per run
+    (FRAGMENTS entries are static; the message shape is not).  The
+    COMPOSED lowering must contain the [E, D] message buffer (it
+    materializes one per layer); the FUSED Pallas lowering must not
+    contain it at all.  The fused XLA fallback still gathers operand
+    rows at that shape, so its invariant is the relative count in
+    ``fusion_audit``, not this absolute fragment."""
+    shape = message_shape(n_edges, embed_dim)
+    if fused:
+        return HloExpectation("ngcf-fused-messages", absent=(shape,))
+    return HloExpectation("ngcf-composed-messages", contains=(shape,))
 
 
 def expect(*names: str) -> HloExpectation:
@@ -261,6 +283,45 @@ def audit_spec(spec, *, serve: bool = True, n_epochs: int = 8
     return violations
 
 
+def fusion_audit(spec, *, where: str = "") -> list[str]:
+    """The fused-NGCF train-step contract, checked on the LOWERED text:
+    build the same spec at ``model.hadamard`` 'fused' and 'composed',
+    lower both micro steps, and require
+
+      * the composed lowering CONTAINS the [E, D] message buffer (the
+        absolute fragment — it materializes one per layer);
+      * the fused lowering references that shape STRICTLY less often —
+        on TPU the Pallas kernel drops it entirely, while the XLA
+        fallback still gathers operand rows at [E, D] inside the
+        aggregation, so the cross-arm count is the invariant that
+        holds on every backend.
+    """
+    from repro.api import build
+    txts, runs = {}, {}
+    for had in ("fused", "composed"):
+        s = spec.override({"model.hadamard": had,
+                           "name": f"{spec.name}@{had}"})
+        runs[had] = build(s)
+        txts[had] = lower_train_step(runs[had])["micro_step"]
+    g = runs["fused"].pipeline.g
+    tag = f"[{where}] " if where else ""
+    if not getattr(g, "fused_hadamard", False):
+        return [f"{tag}model.hadamard='fused' did not resolve to the "
+                "fused route"]
+    out = check_text(txts["composed"],
+                     ngcf_message_fragment(g.n_edges, spec.model.embed_dim,
+                                           fused=False),
+                     where=f"{where}:composed")
+    shape = message_shape(g.n_edges, spec.model.embed_dim)
+    n_fused = txts["fused"].count(shape)
+    n_composed = txts["composed"].count(shape)
+    if n_fused >= n_composed:
+        out.append(f"{tag}fused NGCF micro step references the message "
+                   f"shape {shape} {n_fused}x vs composed "
+                   f"{n_composed}x — the fusion bought nothing")
+    return out
+
+
 # ------------------------------------------------------------------ smoke
 _SMOKE_OV = {"loop.steps": 5, "plan.target_batch": 64,
              "plan.microbatch": 16, "plan.warmup_epochs": 2,
@@ -268,20 +329,35 @@ _SMOKE_OV = {"loop.steps": 5, "plan.target_batch": 64,
 
 
 def smoke_audit(mesh: int = 1, grads: str = "none", ring: str = "none",
-                embed_store: str = "fp32", fused_serve: bool = True
-                ) -> list[str]:
+                embed_store: str = "fp32", fused_serve: bool = True,
+                arch: str = "lightgcn") -> list[str]:
     """The representative-preset audit ``make audit`` runs: the
-    lightgcn-smoke preset at a (mesh, compression) point.  ``mesh > 1``
+    ``{arch}-smoke`` preset at a (mesh, compression) point.  ``mesh > 1``
     requires the caller to have forced that many devices (the CLI
-    spawns a subprocess with ``XLA_FLAGS``)."""
+    spawns a subprocess with ``XLA_FLAGS``).  The ngcf arch adds the
+    fused-Hadamard contract: ``fusion_audit`` at mesh=1; at mesh>1 the
+    ring dispatch owns aggregation, so the audit asserts the fused
+    route correctly fell back (plus the standard ring collectives)."""
     from repro.api import get_preset
     ov = dict(_SMOKE_OV)
     if mesh > 1:
         ov.update({"mesh.shape": (mesh,), "plan.microbatch": 4})
     ov.update({"compression.grads": grads, "compression.ring": ring,
                "compression.embed_store": embed_store})
-    spec = get_preset("lightgcn-smoke").override(ov)
-    name = f"lightgcn-smoke[mesh={mesh},grads={grads},ring={ring}" \
+    spec = get_preset(f"{arch}-smoke").override(ov)
+    name = f"{arch}-smoke[mesh={mesh},grads={grads},ring={ring}" \
            f",store={embed_store}]"
     spec = spec.override({"name": name})
-    return audit_spec(spec, serve=fused_serve)
+    violations = audit_spec(spec, serve=fused_serve)
+    if arch == "ngcf":
+        if mesh <= 1:
+            violations += fusion_audit(spec, where=name)
+        else:
+            from repro.api import build
+            run = build(spec.override(
+                {"name": f"{name}@ring-fallback"}))
+            if getattr(run.pipeline.g, "fused_hadamard", False):
+                violations.append(
+                    f"[{name}] ring dispatch did not fall back to the "
+                    "composed Hadamard route")
+    return violations

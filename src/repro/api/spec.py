@@ -20,10 +20,20 @@ from typing import Any, Mapping
 
 @dataclasses.dataclass(frozen=True)
 class ModelCfg:
-    """Which architecture, how wide, how deep (paper Table 3 axes)."""
+    """Which architecture, how wide, how deep (paper Table 3 axes).
+    ``hadamard`` picks NGCF's Hadamard-message route: 'auto' (fused
+    everywhere except the ring dispatch), 'fused' (the no-[E, D]
+    gather-multiply-aggregate kernel), 'composed' (the legacy edge
+    SDDMM + edge-aggregation pair).  Non-NGCF models ignore it."""
     arch: str = "lightgcn"           # repro.pipeline.registry key
     embed_dim: int = 32
     n_layers: int = 2
+    hadamard: str = "auto"           # 'auto' | 'fused' | 'composed'
+
+    def __post_init__(self):
+        if self.hadamard not in ("auto", "fused", "composed"):
+            raise ValueError(f"model.hadamard must be 'auto', 'fused' or "
+                             f"'composed', got {self.hadamard!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -239,7 +249,8 @@ class ExperimentSpec:
         from repro.pipeline import PipelineConfig
         return PipelineConfig(
             arch=self.model.arch, embed_dim=self.model.embed_dim,
-            n_layers=self.model.n_layers, optimizer=self.optimizer,
+            n_layers=self.model.n_layers, hadamard=self.model.hadamard,
+            optimizer=self.optimizer,
             base_lr=self.base_lr, base_batch=self.plan.base_batch,
             target_batch=self.plan.target_batch,
             microbatch=self.plan.microbatch,

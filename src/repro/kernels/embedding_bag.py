@@ -55,10 +55,14 @@ def _kernel(ids, idmask, table_hbm, out_ref, row_buf, sem,
 def embedding_bag_pallas(table: jax.Array, ids: jax.Array, mask: jax.Array,
                          combiner: str = "sum",
                          bag_block: int = DEFAULT_BAG_BLOCK,
-                         interpret: bool = True) -> jax.Array:
-    """table: f32[V, D]; ids/mask: int32/bool[B, L] -> f32[B, D]."""
+                         interpret: bool | None = None) -> jax.Array:
+    """table: f32[V, D]; ids/mask: int32/bool[B, L] -> f32[B, D].
+    interpret=None resolves from the backend (compiled on TPU,
+    interpreter elsewhere)."""
     if combiner not in ("sum", "mean"):
         raise ValueError(combiner)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     b_in, bag_len = ids.shape
     bb = min(bag_block, max(1, b_in))
     b_pad = ((b_in + bb - 1) // bb) * bb

@@ -18,6 +18,7 @@ import jax
 
 from repro.core import sparse_ops
 from repro.kernels import embedding_bag as _eb
+from repro.kernels import hadamard_spmm as _hspmm
 from repro.kernels import ref as _ref
 from repro.kernels import sddmm as _sddmm
 from repro.kernels import spmm as _spmm
@@ -57,6 +58,23 @@ def spmm_csr(reduce, values, indptr, src_sorted, n_nodes, gather=False,
                                  gather=gather)
     return _spmm.spmm_csr_pallas(reduce, values, indptr, src_sorted, n_nodes,
                                  gather=gather, interpret=not _on_tpu(), **kw)
+
+
+def hadamard_spmm(x, y, indptr, x_idx, y_idx, n_nodes, scale=None,
+                  slope=None, structure="general", impl="xla", **kw):
+    """Fused gather-Hadamard-aggregate: out[v] = sum_{e: dst_e = v}
+    x[x_idx_e] * y[y_idx_e] with an optional (scale, leaky-relu)
+    epilogue — NGCF's per-layer message without the [E, D] matrix.
+    ``structure`` is the caller-asserted index invariant that lets the
+    XLA route factor the Hadamard out of the aggregation (the Pallas
+    kernel needs no structure: the product only ever exists in VMEM)."""
+    if impl == "xla":
+        return _hspmm.hadamard_spmm_xla(x, y, indptr, x_idx, y_idx,
+                                        n_nodes, scale=scale, slope=slope,
+                                        structure=structure)
+    return _hspmm.hadamard_spmm_pallas(x, y, indptr, x_idx, y_idx, n_nodes,
+                                       scale=scale, slope=slope,
+                                       interpret=not _on_tpu(), **kw)
 
 
 def embedding_bag(table, ids, mask, combiner="sum", impl="xla", **kw):

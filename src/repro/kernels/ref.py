@@ -42,6 +42,24 @@ def spmm_csr_ref(reduce: str, values: jax.Array, indptr: jax.Array,
     raise ValueError(reduce)
 
 
+def hadamard_spmm_ref(x: jax.Array, y: jax.Array, indptr: jax.Array,
+                      x_idx: jax.Array, y_idx: jax.Array, n_nodes: int,
+                      scale: jax.Array | None = None,
+                      slope: float | None = None) -> jax.Array:
+    """Naive gather -> Hadamard -> segment-sum composition (the [E, D]
+    message matrix the fused kernel avoids IS formed here — this is the
+    parity ground truth, never a production route)."""
+    e = x_idx.shape[0]
+    dst = jnp.searchsorted(indptr, jnp.arange(e), side="right") - 1
+    msgs = x.astype(jnp.float32)[x_idx] * y.astype(jnp.float32)[y_idx]
+    out = jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
+    if scale is not None:
+        out = out * scale[:, None]
+    if slope is not None:
+        out = jnp.where(out >= 0, out, out * slope)
+    return out
+
+
 def embedding_bag_ref(table: jax.Array, ids: jax.Array, mask: jax.Array,
                       combiner: str = "sum") -> jax.Array:
     rows = table[ids]                                  # [B, L, D]

@@ -80,11 +80,14 @@ def sddmm_pallas(op: str, x: jax.Array, y: jax.Array, src: jax.Array,
                  dst: jax.Array, edge_mask: jax.Array,
                  coeff: jax.Array | None = None,
                  edge_block: int = DEFAULT_EDGE_BLOCK,
-                 interpret: bool = True) -> jax.Array:
+                 interpret: bool | None = None) -> jax.Array:
     """Pallas SDDMM.  x, y: f32[N, D]; src/dst: int32[E]; returns
-    f32[E, D] (or f32[E] for op='dot')."""
+    f32[E, D] (or f32[E] for op='dot').  interpret=None resolves from
+    the backend (compiled on TPU, interpreter elsewhere)."""
     if op not in ("mul", "add", "dot", "copy"):
         raise ValueError(op)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     e_in = src.shape[0]
     eb = min(edge_block, max(8, e_in))
     e_pad = ((e_in + eb - 1) // eb) * eb

@@ -42,12 +42,28 @@ def _kernel(indptr, rows_src, x_hbm, out_ref, row_buf, sem,
         lo = indptr[row]
         hi = indptr[row + 1]
 
-        def edge_body(e, _):
+        # double-buffered row DMA: two VMEM row buffers + two
+        # semaphores ping-pong over the edge loop, so edge e+1's fetch
+        # overlaps edge e's accumulate instead of serializing on one
+        # start();wait() pair
+        def dma(e, slot):
             idx = rows_src[e] if gather else e
-            cp = pltpu.make_async_copy(x_hbm.at[pl.ds(idx, 1), :], row_buf, sem)
-            cp.start()
-            cp.wait()
-            v = row_buf[0]
+            return pltpu.make_async_copy(x_hbm.at[pl.ds(idx, 1), :],
+                                         row_buf.at[slot], sem.at[slot])
+
+        @pl.when(lo < hi)
+        def _warmup():
+            dma(lo, lo % 2).start()
+
+        def edge_body(e, _):
+            slot = e % 2
+
+            @pl.when(e + 1 < hi)
+            def _prefetch():
+                dma(e + 1, (e + 1) % 2).start()
+
+            dma(e, slot).wait()
+            v = row_buf[slot, 0]
             if reduce == "sum":
                 out_ref[r, :] = out_ref[r, :] + v
             else:
@@ -68,16 +84,22 @@ def _kernel(indptr, rows_src, x_hbm, out_ref, row_buf, sem,
 def spmm_csr_pallas(reduce: str, values: jax.Array, indptr: jax.Array,
                     src_sorted: jax.Array, n_nodes: int,
                     row_block: int = DEFAULT_ROW_BLOCK,
-                    gather: bool = False, interpret: bool = True) -> jax.Array:
+                    gather: bool = False,
+                    interpret: bool | None = None) -> jax.Array:
     """CSR SpMM.
 
     values: f32[E, D] per-edge messages (gather=False) or f32[N_src, D]
       node features gathered through ``src_sorted`` (gather=True).
     indptr: int32[n_nodes+1] destination row pointers over dst-sorted edges.
     src_sorted: int32[E] source index per dst-sorted edge (used iff gather).
+    interpret: None resolves from the backend (compiled on TPU,
+      interpreter elsewhere), so direct callers bypassing ``kernels.ops``
+      don't silently run interpreter-mode Pallas on TPU.
     """
     if reduce not in ("sum", "max"):
         raise ValueError(reduce)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     rb = row_block
     n_pad = ((n_nodes + rb - 1) // rb) * rb
     pad = n_pad - n_nodes
@@ -90,8 +112,8 @@ def spmm_csr_pallas(reduce: str, values: jax.Array, indptr: jax.Array,
         grid=(n_pad // rb,),
         in_specs=[pl.BlockSpec(memory_space=MEM_HBM)],
         out_specs=pl.BlockSpec((rb, d), lambda i, *_: (i, 0)),
-        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32),
-                        pltpu.SemaphoreType.DMA],
+        scratch_shapes=[pltpu.VMEM((2, 1, d), jnp.float32),
+                        pltpu.SemaphoreType.DMA((2,))],
     )
     fn = pl.pallas_call(
         functools.partial(_kernel, reduce=reduce, rb=rb, gather=gather),

@@ -790,10 +790,26 @@ def _gnnrecsys_train(arch, mod, shape_name, shape, mesh):
     if is_ngcf:
         per_layer += 2 * (cfg.n_users + cfg.n_items) * d * d * 2
     flops = 3 * cfg.n_layers * per_layer
+    meta = dict(model_flops=flops, n_edges=cfg.n_edges, bpr_batch=bb)
+    if is_ngcf:
+        # NGCF byte model (paper §2.1): the dominant HBM term is the
+        # per-layer [E, D] Hadamard message stream — written by the
+        # SDDMM-mul, read by both SpMMs, and saved/re-read as an
+        # autodiff residual (~4 touches/layer, both directions).  The
+        # fused hadamard_spmm route forms the product in VMEM and
+        # rematerializes it in backward, so that term vanishes; the
+        # node-level gather/scatter and optimizer traffic stand.
+        row = d * 4
+        v = cfg.n_users + cfg.n_items
+        msg_bytes = cfg.n_layers * 2 * 4 * cfg.n_edges * row
+        node_bytes = cfg.n_layers * 3 * 2 * (2 * cfg.n_edges + 2 * v) * row
+        opt_bytes = 6 * (cfg.n_layers + 1) * v * row   # adam: p+m+v r/w
+        coll_bytes = 2 * (cfg.n_layers + 1) * v * row  # grad all-reduce
+        meta.update(analytic_hbm=float(msg_bytes + node_bytes + opt_bytes),
+                    analytic_coll=float(coll_bytes),
+                    hadamard_msg_hbm_bytes=float(msg_bytes))
     return Cell(arch, shape_name, "gnnrecsys_train", step, args, in_sh, out_sh,
-                donate=(0, 1),
-                meta=dict(model_flops=flops, n_edges=cfg.n_edges,
-                          bpr_batch=bb))
+                donate=(0, 1), meta=meta)
 
 
 _BUILDERS = {

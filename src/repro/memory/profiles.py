@@ -53,12 +53,15 @@ def quantized_table_bytes(n_rows: int, row_bytes: int,
 def gnn_recsys_profiles(n_users: int, n_items: int, n_edges: int,
                         embed_dim: int, n_layers: int,
                         dtype_bytes: int = 4,
-                        embed_store: str = "fp32") -> list[AccessProfile]:
+                        embed_store: str = "fp32",
+                        fused_messages: bool = False) -> list[AccessProfile]:
     """Paper §2.1 memory model: len(m)*|E| per layer for messages,
     len(x)*|V| for embeddings, doubled for training (grads).  With
     ``embed_store='int8'`` the embedding table carries a quantized
     capacity-tier footprint (``store_bytes`` at ~1/4 bytes), the
-    storage arm of ``repro.api.CompressionCfg``."""
+    storage arm of ``repro.api.CompressionCfg``.  ``fused_messages``
+    models the fused Hadamard-SpMM route: the per-layer [E, D] message
+    stream never exists, so its profiles are dropped entirely."""
     v = n_users + n_items
     row = embed_dim * dtype_bytes
     embed_sb = quantized_table_bytes(v, row, dtype_bytes) \
@@ -76,10 +79,13 @@ def gnn_recsys_profiles(n_users: int, n_items: int, n_edges: int,
     ]
     for l in range(n_layers):
         # SDDMM output: written once (streaming), read once by SpMM; and
-        # re-read/re-written in backward.
-        out.append(AccessProfile(f"messages_l{l}", n_edges * row,
-                                 reads_per_step=2.0, writes_per_step=2.0,
-                                 access_size=row))
+        # re-read/re-written in backward.  The fused Hadamard-SpMM
+        # route forms the product in VMEM only — no stream to profile.
+        if not fused_messages:
+            out.append(AccessProfile(f"messages_l{l}", n_edges * row,
+                                     reads_per_step=2.0,
+                                     writes_per_step=2.0,
+                                     access_size=row))
         out.append(AccessProfile(f"activations_l{l}", v * row,
                                  reads_per_step=2.0, writes_per_step=2.0,
                                  access_size=row))

@@ -66,6 +66,8 @@ class PipelineConfig:
     hbm_budget: int | None = None      # fast-tier budget override (bytes/device)
     impl: str | None = None            # kernel dispatch override; 'ring'
     #                                    forces the sharded aggregation route
+    hadamard: str = "auto"             # NGCF Hadamard route: 'auto' |
+    #                                    'fused' (no [E, D]) | 'composed'
     seed: int = 0
     # memory-tier subsystem (repro.memory): which registered topology
     # the run models, which placement policy assigns tensors to tiers,
@@ -112,7 +114,8 @@ class Pipeline:
             cfg.mesh_shape, cfg.mesh_axes, cfg.spmm, cfg.ring_steps,
             ring_quant=(cfg.ring_compression == "int8"))
         self.g = BipartiteCSR(train.user, train.item, train.n_users,
-                              train.n_items, impl=cfg.impl, shard=self.shard)
+                              train.n_items, impl=cfg.impl, shard=self.shard,
+                              hadamard=cfg.hadamard)
         self.shard = self.g.shard
         impl = self.g.impl                     # kernel impl: pallas | xla
         self.n_items = train.n_items

@@ -90,10 +90,12 @@ def profiles_from_state(params, opt_state, g: BipartiteCSR, n_layers: int,
     profs.append(AccessProfile("graph/csr", gbytes,
                                reads_per_step=2.0 * n_layers,
                                writes_per_step=0.0, access_size=8))
-    if spec.materializes_messages:
+    if spec.messages_materialized(g):
         # per-layer messages are layer-input wide ([E, embed_dim]) even
         # when the model concatenates layer outputs; sharded runs
-        # materialize only the local edge partition's share
+        # materialize only the local edge partition's share.  The fused
+        # Hadamard route never forms them: no profile, no placement,
+        # and the microbatch derives against the reclaimed budget
         row = embed_dim * 4
         for l in range(n_layers):
             profs.append(AccessProfile(

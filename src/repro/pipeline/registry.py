@@ -45,6 +45,14 @@ class ModelSpec:
         """Final embedding width (drives the planner's per-sample cost)."""
         return embed_dim * (n_layers + 1) if self.concat_layers else embed_dim
 
+    def messages_materialized(self, g: "BipartiteCSR | None" = None) -> bool:
+        """Whether THIS run's forward actually forms the per-layer
+        [E, embed_dim] message matrix: the graph's fused Hadamard route
+        keeps it out of memory entirely, so the planner must not
+        profile the stream it no longer carries."""
+        return self.materializes_messages \
+            and not getattr(g, "fused_hadamard", False)
+
 
 # ---------------------------------------------------------------- lightgcn
 def _lightgcn_init(key, n_users, n_items, embed_dim, n_layers):
@@ -70,11 +78,18 @@ def _ngcf_init(key, n_users, n_items, embed_dim, n_layers):
 def _ngcf_forward(params, g: BipartiteCSR, n_layers: int):
     xu, xi = params["user_embed"], params["item_embed"]
     outs_u, outs_i = [xu], [xi]
+    fused = getattr(g, "fused_hadamard", False)
     for w1, w2 in zip(params["w1"], params["w2"]):
-        # O3: one Hadamard SDDMM per layer, reused for both directions
-        mul_ui = xu[g.ui_src] * xi[g.ui_dst]             # [E, D], ui order
-        agg_mul_item = g.edge_agg_item(mul_ui)
-        agg_mul_user = g.edge_agg_user(mul_ui[g.perm_ui_to_iu])
+        if fused:
+            # fused gather-Hadamard-aggregate (rematerializing VJP):
+            # the [E, D] message matrix never exists in memory
+            agg_mul_item = g.hadamard_agg_item(xu, xi)
+            agg_mul_user = g.hadamard_agg_user(xi, xu)
+        else:
+            # O3: one Hadamard SDDMM per layer, reused for both directions
+            mul_ui = xu[g.ui_src] * xi[g.ui_dst]         # [E, D], ui order
+            agg_mul_item = g.edge_agg_item(mul_ui)
+            agg_mul_user = g.edge_agg_user(mul_ui[g.perm_ui_to_iu])
         # O1: aggregate raw src features first, matmul at node level
         h_item = agg_mul_item @ w1 + g.agg_u2i(xu) @ w2
         h_user = agg_mul_user @ w1 + g.agg_i2u(xi) @ w2

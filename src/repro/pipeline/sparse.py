@@ -96,6 +96,51 @@ def _make_edge_agg(indptr, dst_sorted, n_dst, impl):
     return agg
 
 
+def _make_hadamard_agg(indptr_f, src_f, dst_f, n_dst, indptr_b, src_b,
+                       n_src, impl):
+    """Fused Hadamard aggregation with a REMATERIALIZING custom VJP.
+
+    Forward: out[v] = sum_{e: dst_e = v} x[src_e] * y[v] — one
+    ``ops.hadamard_spmm`` call (structure ``y_is_dst``: the second
+    factor rides the destination), no [E, D] message matrix.
+
+    Backward saves only the NODE embeddings (x, y) as residuals and
+    recomputes the edge products inside the cotangent kernels instead
+    of storing [E, D] residuals; both cotangent paths are themselves
+    fused gather-multiply-aggregate calls over the same CSR pair:
+
+      d_x[s] = sum_{e: src_e = s} ct[dst_e] * y[dst_e]
+               — the transpose CSR with BOTH gathers through its source
+                 index (structure ``x_eq_y``: the product forms at node
+                 level, gathered once);
+      d_y[v] = ct[v] * sum_{e: dst_e = v} x[src_e]
+               — the forward CSR with ct riding the destination
+                 (structure ``y_is_dst`` again).
+    """
+
+    def _run(x, y):
+        return kops.hadamard_spmm(x, y, indptr_f, src_f, dst_f, n_dst,
+                                  structure="y_is_dst", impl=impl)
+
+    @jax.custom_vjp
+    def agg(x, y):
+        return _run(x, y)
+
+    def fwd(x, y):
+        return _run(x, y), (x, y)
+
+    def bwd(res, ct):
+        x, y = res
+        d_x = kops.hadamard_spmm(ct, y, indptr_b, src_b, src_b, n_src,
+                                 structure="x_eq_y", impl=impl)
+        d_y = kops.hadamard_spmm(x, ct, indptr_f, src_f, dst_f, n_dst,
+                                 structure="y_is_dst", impl=impl)
+        return d_x, d_y
+
+    agg.defvjp(fwd, bwd)
+    return agg
+
+
 # ---------------------------------------------------------------- ring
 class _RingGraph:
     """Ring-SpMM aggregations over the unified node space of one
@@ -277,11 +322,22 @@ class BipartiteCSR:
       edge_agg_user(m) -> [n_users, D]   m in iu (user-sorted) edge order
       perm_ui_to_iu    reorders ui-order edge values into iu order (the
                        O3 SDDMM-reuse path: one Hadamard per layer)
+      hadamard_agg_item(xu, xi) -> [n_items, D]   fused sum_e xu[u_e]*xi[i]
+      hadamard_agg_user(xi, xu) -> [n_users, D]   fused sum_e xi[i_e]*xu[u]
+                       (rematerializing VJP, no [E, D] message matrix)
+
+    ``hadamard`` selects NGCF's Hadamard-message route: 'fused' (the
+    no-[E, D] ops above), 'composed' (the edge_agg path), or 'auto' —
+    fused everywhere except under the ring dispatch, whose rotation
+    schedule has no fused gather-multiply-aggregate yet
+    (``fused_hadamard`` exposes the resolved choice to the registry
+    forward and the planner).
     """
 
     def __init__(self, user: np.ndarray, item: np.ndarray, n_users: int,
                  n_items: int, edge_mask: np.ndarray | None = None,
-                 impl: str | None = None, shard: ShardPlan | None = None):
+                 impl: str | None = None, shard: ShardPlan | None = None,
+                 hadamard: str = "auto"):
         # 'ring' is a first-class dispatch value: it forces the sharded
         # aggregation route (degenerate 1-device ring when no mesh is
         # given); node-level kernels still need a pallas/xla backend.
@@ -343,6 +399,19 @@ class BipartiteCSR:
                                             n_items, self.impl)
         self.edge_agg_user = _make_edge_agg(self.iu_indptr, self.iu_dst,
                                             n_users, self.impl)
+        # fused Hadamard aggregation (NGCF): ring runs fall back to the
+        # composed edge_agg route — the rotation schedule owns those
+        if hadamard not in ("auto", "fused", "composed"):
+            raise ValueError(f"hadamard must be 'auto', 'fused' or "
+                             f"'composed', got {hadamard!r}")
+        self.fused_hadamard = hadamard != "composed" \
+            and self.spmm != "ring"
+        self.hadamard_agg_item = _make_hadamard_agg(
+            self.ui_indptr, self.ui_src, self.ui_dst, n_items,
+            self.iu_indptr, self.iu_src, n_users, self.impl)
+        self.hadamard_agg_user = _make_hadamard_agg(
+            self.iu_indptr, self.iu_src, self.iu_dst, n_users,
+            self.ui_indptr, self.ui_src, n_items, self.impl)
 
     def seen_csr(self) -> tuple[np.ndarray, np.ndarray]:
         """(indptr, items) numpy user-CSR over the train interactions —

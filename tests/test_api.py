@@ -64,6 +64,18 @@ def test_override_dotted_paths():
         spec.override({"model.width": 64})
 
 
+def test_model_hadamard_validates_and_threads_to_pipeline():
+    """ModelCfg.hadamard round-trips, rejects unknown routes, and lands
+    on PipelineConfig so the engine builds the requested NGCF dataflow."""
+    with pytest.raises(ValueError, match="hadamard"):
+        ModelCfg(hadamard="bogus")
+    spec = _smoke_spec().override({"model.arch": "ngcf",
+                                   "model.hadamard": "composed"})
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    assert spec.to_pipeline_config().hadamard == "composed"
+    assert _smoke_spec().to_pipeline_config().hadamard == "auto"
+
+
 # ------------------------------------------------------------- mesh section
 def test_mesh_cfg_roundtrip_and_coercion():
     """MeshCfg survives the exact dict round-trip AND the JSON round-trip

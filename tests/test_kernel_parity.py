@@ -164,6 +164,174 @@ def test_custom_vjp_matches_plain_autodiff_of_ref():
                                jax.grad(via_dense)(x), rtol=1e-4, atol=1e-5)
 
 
+# ------------------------------------------------------ hadamard_spmm
+def _hadamard_case(seed, n_src, n_dst, e, integer=False):
+    """dst-sorted CSR + per-edge (x_idx, y_idx) gather indices; edges
+    land on a strict subset of destinations so empty rows exist."""
+    rng = np.random.default_rng(seed)
+    dst = np.sort(rng.integers(0, max(n_dst // 2, 1), e)).astype(np.int32)
+    indptr = np.searchsorted(dst, np.arange(n_dst + 1)).astype(np.int32)
+    x_idx = rng.integers(0, n_src, e).astype(np.int32)
+    y_idx = rng.integers(0, n_dst, e).astype(np.int32)
+
+    def feats(n, d):
+        if integer:
+            return rng.integers(-3, 4, (n, d)).astype(np.float32)
+        return rng.standard_normal((n, d)).astype(np.float32)
+
+    return indptr, x_idx, y_idx, dst, feats
+
+
+@pytest.mark.parametrize("n_src,n_dst,e,d,rb", [
+    (9, 7, 30, 100, 4),    # D % 128 != 0, n_dst % row_block != 0
+    (13, 11, 21, 37, 8),   # everything ragged
+    (6, 5, 1, 130, 4),     # single edge, D just over one lane tile
+    (8, 6, 0, 16, 4),      # zero edges: all rows empty
+])
+def test_hadamard_spmm_adversarial_shapes(n_src, n_dst, e, d, rb):
+    from repro.kernels.hadamard_spmm import hadamard_spmm_pallas
+    indptr, x_idx, y_idx, _, feats = _hadamard_case(
+        hash((n_src, n_dst, e, d)) % 2**31, n_src, n_dst, e)
+    x, y = feats(n_src, d), feats(n_dst, d)
+    got = hadamard_spmm_pallas(jnp.asarray(x), jnp.asarray(y),
+                               jnp.asarray(indptr), jnp.asarray(x_idx),
+                               jnp.asarray(y_idx), n_dst, row_block=rb)
+    want = ref.hadamard_spmm_ref(jnp.asarray(x), jnp.asarray(y),
+                                 jnp.asarray(indptr), jnp.asarray(x_idx),
+                                 jnp.asarray(y_idx), n_dst)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    empty = np.diff(indptr) == 0
+    assert empty.any()
+    np.testing.assert_array_equal(np.asarray(got)[empty], 0.0)
+
+
+def test_hadamard_spmm_integer_exact():
+    """Integer-valued embeddings: accumulation order cannot matter, so
+    the fused kernel must match the oracle BIT-exactly."""
+    from repro.kernels.hadamard_spmm import hadamard_spmm_pallas
+    indptr, x_idx, y_idx, _, feats = _hadamard_case(7, 12, 9, 40,
+                                                    integer=True)
+    x, y = feats(12, 24), feats(9, 24)
+    got = hadamard_spmm_pallas(jnp.asarray(x), jnp.asarray(y),
+                               jnp.asarray(indptr), jnp.asarray(x_idx),
+                               jnp.asarray(y_idx), 9, row_block=4)
+    want = ref.hadamard_spmm_ref(jnp.asarray(x), jnp.asarray(y),
+                                 jnp.asarray(indptr), jnp.asarray(x_idx),
+                                 jnp.asarray(y_idx), 9)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_hadamard_spmm_fused_epilogue():
+    """Degree-norm scale + leaky-relu applied in-VMEM must match the
+    oracle's epilogue composition."""
+    from repro.kernels.hadamard_spmm import hadamard_spmm_pallas
+    n_src, n_dst, e, d = 10, 8, 25, 36
+    indptr, x_idx, y_idx, _, feats = _hadamard_case(11, n_src, n_dst, e)
+    x, y = feats(n_src, d), feats(n_dst, d)
+    rng = np.random.default_rng(12)
+    scale = rng.standard_normal(n_dst).astype(np.float32)
+    args = (jnp.asarray(x), jnp.asarray(y), jnp.asarray(indptr),
+            jnp.asarray(x_idx), jnp.asarray(y_idx), n_dst)
+    got = hadamard_spmm_pallas(*args, scale=jnp.asarray(scale), slope=0.2,
+                               row_block=4)
+    want = ref.hadamard_spmm_ref(*args, scale=jnp.asarray(scale), slope=0.2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("structure", ["y_is_dst", "x_eq_y"])
+def test_hadamard_spmm_structure_variants_match_oracle(structure):
+    """The structured XLA routes (no [E, D] intermediate) must equal the
+    naive gather/segment oracle when the asserted structure holds."""
+    from repro.kernels.hadamard_spmm import hadamard_spmm_xla
+    n_src, n_dst, e, d = 9, 7, 28, 20
+    indptr, x_idx, y_idx, dst, feats = _hadamard_case(13, n_src, n_dst, e)
+    if structure == "y_is_dst":
+        y_idx = dst.copy()                      # y rides the destination
+        n_y = n_dst
+    else:
+        y_idx = x_idx.copy()                    # both gathers share an index
+        n_y = n_src
+    x, y = feats(n_src, d), feats(n_y, d)
+    args = (jnp.asarray(x), jnp.asarray(y), jnp.asarray(indptr),
+            jnp.asarray(x_idx), jnp.asarray(y_idx), n_dst)
+    got = hadamard_spmm_xla(*args, structure=structure)
+    want = ref.hadamard_spmm_ref(*args)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_hadamard_spmm_ops_dispatch_parity():
+    """kernels.ops dispatch: impl='pallas' and impl='xla' agree."""
+    from repro.kernels import ops as kops
+    n_src, n_dst, e, d = 8, 6, 20, 12
+    indptr, x_idx, y_idx, _, feats = _hadamard_case(17, n_src, n_dst, e)
+    x, y = feats(n_src, d), feats(n_dst, d)
+    args = (jnp.asarray(x), jnp.asarray(y), jnp.asarray(indptr),
+            jnp.asarray(x_idx), jnp.asarray(y_idx), n_dst)
+    a = kops.hadamard_spmm(*args, impl="xla")
+    b = kops.hadamard_spmm(*args, impl="pallas")
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_hadamard_spmm_bad_structure_raises():
+    from repro.kernels.hadamard_spmm import hadamard_spmm_xla
+    with pytest.raises(ValueError, match="structure"):
+        hadamard_spmm_xla(jnp.zeros((2, 3)), jnp.zeros((2, 3)),
+                          jnp.zeros(3, jnp.int32), jnp.zeros(1, jnp.int32),
+                          jnp.zeros(1, jnp.int32), 2, structure="nope")
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_hadamard_agg_rematerializing_vjp_finite_difference(impl):
+    """The fused Hadamard aggregation's rematerializing VJP (residuals
+    are node embeddings only; cotangents are themselves fused calls)
+    must match central finite differences in BOTH arguments."""
+    rng = np.random.default_rng(3)
+    nu, ni, e, d = 7, 6, 16, 4
+    user = rng.integers(0, nu, e).astype(np.int32)
+    item = rng.integers(0, ni, e).astype(np.int32)
+    g = BipartiteCSR(user, item, nu, ni, impl=impl, hadamard="fused")
+    xu = jnp.asarray(rng.standard_normal((nu, d)).astype(np.float32))
+    xi = jnp.asarray(rng.standard_normal((ni, d)).astype(np.float32))
+
+    def loss_u(xu):
+        return jnp.sum(jnp.tanh(g.hadamard_agg_item(xu, xi)))
+
+    def loss_i(xi):
+        return jnp.sum(jnp.tanh(g.hadamard_agg_item(xu, xi))) \
+            + jnp.sum(g.hadamard_agg_user(xi, xu) ** 2)
+
+    _fd_check(loss_u, xu, [(0, 0), (3, 2), (6, 3)])
+    _fd_check(loss_i, xi, [(0, 0), (2, 1), (5, 3)])
+
+
+def test_hadamard_agg_vjp_matches_autodiff_of_oracle():
+    """Fused hadamard_agg gradients equal XLA autodiff of the naive
+    gather-multiply-segment composition (which stores [E, D] residuals;
+    ours rematerializes them)."""
+    rng = np.random.default_rng(4)
+    nu, ni, e, d = 9, 8, 26, 5
+    user = rng.integers(0, nu, e).astype(np.int32)
+    item = rng.integers(0, ni, e).astype(np.int32)
+    g = BipartiteCSR(user, item, nu, ni, impl="xla", hadamard="fused")
+    xu = rng.standard_normal((nu, d)).astype(np.float32)
+    xi = rng.standard_normal((ni, d)).astype(np.float32)
+
+    def fused(xu, xi):
+        return jnp.sum(jnp.sin(g.hadamard_agg_item(xu, xi)))
+
+    def naive(xu, xi):
+        msgs = xu[g.ui_src] * xi[g.ui_dst]
+        agg = jax.ops.segment_sum(msgs, g.ui_dst, num_segments=ni)
+        return jnp.sum(jnp.sin(agg))
+
+    gu_f, gi_f = jax.grad(fused, argnums=(0, 1))(jnp.asarray(xu),
+                                                 jnp.asarray(xi))
+    gu_n, gi_n = jax.grad(naive, argnums=(0, 1))(jnp.asarray(xu),
+                                                 jnp.asarray(xi))
+    np.testing.assert_allclose(gu_f, gu_n, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gi_f, gi_n, rtol=1e-4, atol=1e-5)
+
+
 # ------------------------------------------------- fused serving kernel
 def _fused_both(ue, ie, seen, mask, k, blk):
     """(xla-ref, pallas-interpret) results of the fused serving kernel."""

@@ -45,12 +45,29 @@ def build_snapshots() -> dict:
         spec.model.embed_dim, spec.model.n_layers, embed_store=store)
         for store in ("fp32", "int8")}
     total = sum(p.nbytes for p in arms["fp32"])
+    # NGCF arms: the paper-scale NGCF profile set with and without the
+    # fused Hadamard-SpMM route.  Fused drops the per-layer [E, D]
+    # message streams entirely; both arms run against the SAME budget
+    # (30% of the UNFUSED footprint) so the snapshot pins the placement
+    # shift the reclaimed capacity buys, not a budget artifact.
+    nspec = get_preset("ngcf-full")
+    ngcf_arms = {"ngcf": gnn_recsys_profiles(
+        nspec.data.n_users, nspec.data.n_items, nspec.data.edges,
+        nspec.model.embed_dim, nspec.model.n_layers),
+        "ngcf-fused": gnn_recsys_profiles(
+        nspec.data.n_users, nspec.data.n_items, nspec.data.edges,
+        nspec.model.embed_dim, nspec.model.n_layers, fused_messages=True)}
+    ngcf_total = sum(p.nbytes for p in ngcf_arms["ngcf"])
     out = {"_profile": {
         "preset": "lightgcn-full",
         "n_tensors": len(arms["fp32"]),
         "total_bytes": int(total),
         "fast_budget_fraction": 0.3,
         "storage_arms": ["fp32", "int8"],
+        "ngcf_preset": "ngcf-full",
+        "ngcf_n_tensors": {k: len(v) for k, v in ngcf_arms.items()},
+        "ngcf_total_bytes": int(ngcf_total),
+        "ngcf_arms": sorted(ngcf_arms),
     }}
     for name in topology_names():
         topo = get_topology(name)
@@ -60,6 +77,11 @@ def build_snapshots() -> dict:
             plan = get_policy("greedy")(profiles, topo, budgets=budgets)
             key = name if store == "fp32" else f"{name}@int8"
             out[key] = plan.to_dict()
+        nbudgets = {topo.fast.name: int(ngcf_total * 0.3),
+                    topo.slow.name: max(topo.slow.capacity, ngcf_total)}
+        for arm, profiles in ngcf_arms.items():
+            plan = get_policy("greedy")(profiles, topo, budgets=nbudgets)
+            out[f"{name}@{arm}"] = plan.to_dict()
     return out
 
 

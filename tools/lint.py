@@ -38,11 +38,15 @@ _cli.ensure_src()
 BASELINE_PATH = _cli.tool_file("lint_baseline.json")
 LINT_ROOTS = ("src", "benchmarks")
 
-# (mesh, grads, ring): the representative preset points ``make audit``
-# lowers — single device, plain 4-way mesh, int8 gradient psum, int8
-# quantized ring
-HLO_ARMS = ((1, "none", "none"), (4, "none", "none"),
-            (4, "int8", "none"), (4, "none", "int8"))
+# (arch, mesh, grads, ring): the representative preset points ``make
+# audit`` lowers — lightgcn single device, plain 4-way mesh, int8
+# gradient psum, int8 quantized ring; ngcf single device (the fused
+# Hadamard contract: fusion_audit's cross-arm message-shape check) and
+# 4-way mesh (the fused route must fall back to the composed path
+# under the ring dispatch)
+HLO_ARMS = (("lightgcn", 1, "none", "none"), ("lightgcn", 4, "none", "none"),
+            ("lightgcn", 4, "int8", "none"), ("lightgcn", 4, "none", "int8"),
+            ("ngcf", 1, "none", "none"), ("ngcf", 4, "none", "none"))
 
 
 def run_lint(paths: list[str]) -> list:
@@ -77,7 +81,7 @@ def lint_main(args) -> int:
 
 def hlo_main(args) -> int:
     failures: list[str] = []
-    for mesh, grads, ring in HLO_ARMS:
+    for arch, mesh, grads, ring in HLO_ARMS:
         env = dict(os.environ)
         env["PYTHONPATH"] = os.pathsep.join(
             [str(_cli.repo_root() / "src"),
@@ -89,11 +93,11 @@ def hlo_main(args) -> int:
         code = ("import json, sys\n"
                 "from repro.analysis import hlo_audit\n"
                 f"v = hlo_audit.smoke_audit(mesh={mesh}, "
-                f"grads={grads!r}, ring={ring!r})\n"
+                f"grads={grads!r}, ring={ring!r}, arch={arch!r})\n"
                 "print(json.dumps(v))\n")
         proc = subprocess.run([sys.executable, "-c", code],
                               capture_output=True, text=True, env=env)
-        arm = f"mesh={mesh},grads={grads},ring={ring}"
+        arm = f"arch={arch},mesh={mesh},grads={grads},ring={ring}"
         if proc.returncode != 0:
             failures.append(f"[{arm}] audit crashed:\n"
                             + proc.stderr.strip())
