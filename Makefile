@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-fast test-slow test-multidevice check-plan lint audit bench-smoke bench train-smoke examples check-bytecode
+.PHONY: test test-fast test-slow test-multidevice check-plan lint audit bench-smoke bench serve-bench train-smoke examples check-bytecode
 
 # tier-1 suite (the CI gate) + pass/fail delta vs the seed baseline,
 # then the placement-plan golden-snapshot gate (per-topology)
@@ -45,6 +45,12 @@ bench-smoke:
 
 bench:
 	PYTHONPATH=src:. $(PY) -m benchmarks.run
+
+# serving subsystem: Zipf-stream cache arms, ANN retrieval recall/
+# speedup at 131072 items, open/closed-loop coalescing load sim;
+# writes BENCH_serving.json (root + results/ mirror)
+serve-bench:
+	PYTHONPATH=src:. $(PY) -m benchmarks.run --only serving
 
 # 20 pipeline steps with real gradient accumulation (target 2048, micro 512)
 train-smoke:

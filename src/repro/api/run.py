@@ -112,7 +112,20 @@ class Run:
         kw.setdefault("item_block", self.spec.eval.item_block)
         kw.setdefault("cache_rows", self.spec.serve.cache_rows)
         kw.setdefault("fused", self.spec.serve.fused)
+        kw.setdefault("ann", self.spec.serve.ann)
+        kw.setdefault("keep_frac", self.spec.serve.keep_frac)
         return Recommender.from_pipeline(self.pipeline, self.state, **kw)
+
+    def service(self, *, clock=None, **kw):
+        """Queue-fronted serving: a ``RecommenderService`` wiring the
+        coalescing queue (``spec.serve.queue_*`` knobs) → the ANN index
+        (when ``spec.serve.ann``) → the placed ``Recommender``."""
+        from repro.serving import RecommenderService
+        return RecommenderService(
+            self.recommender(**kw),
+            max_batch=self.spec.serve.queue_max_batch,
+            max_wait_us=self.spec.serve.queue_max_wait_us,
+            clock=clock)
 
     def recommend(self, user_ids, k: int | None = None,
                   exclude_seen: bool = True):

@@ -167,15 +167,23 @@ class EvalCfg:
 
 @dataclasses.dataclass(frozen=True)
 class ServeCfg:
-    """Serving hot-path knobs (``eval.Recommender``): the hot-row cache
-    budget in front of host-demoted embedding tables (device-resident
-    LFU slots, priced against the fast tier by
-    ``pipeline.plan.serving_profiles``) and the fused
-    gather+score+top-K kernel routing.  Defaults are the identity:
-    no cache, auto-fused — bit-identical results either way (pinned by
+    """Serving hot-path knobs (``eval.Recommender`` /
+    ``serving.RecommenderService``): the hot-row cache budget in front
+    of host-demoted embedding tables (device-resident LFU slots, priced
+    against the fast tier by ``pipeline.plan.serving_profiles``), the
+    fused gather+score+top-K kernel routing, the block-pruned ANN index
+    (``serving.ann.AnnIndex``; ``keep_frac`` is the surviving-block
+    fraction — 1.0 scans everything and is bit-identical to the exact
+    streamed sweep), and the request-coalescing queue's two dispatch
+    triggers.  Defaults are the identity: no cache, auto-fused, no ANN
+    pruning — bit-identical results either way (pinned by
     tests/test_serving.py)."""
     cache_rows: int = 0              # device-resident hot rows; 0 = off
     fused: bool | None = None        # None = auto (device-resident items)
+    ann: bool = False                # block-pruned approximate retrieval
+    keep_frac: float = 1.0           # surviving block fraction, (0, 1]
+    queue_max_batch: int = 64        # coalescing bound (pow2 bucket cap)
+    queue_max_wait_us: int = 1_000   # oldest-request dispatch deadline
 
     def __post_init__(self):
         if int(self.cache_rows) < 0:
@@ -184,6 +192,22 @@ class ServeCfg:
         object.__setattr__(self, "cache_rows", int(self.cache_rows))
         if self.fused is not None:
             object.__setattr__(self, "fused", bool(self.fused))
+        object.__setattr__(self, "ann", bool(self.ann))
+        kf = float(self.keep_frac)
+        if not 0.0 < kf <= 1.0:
+            raise ValueError(f"serve.keep_frac must be in (0, 1], "
+                             f"got {self.keep_frac}")
+        object.__setattr__(self, "keep_frac", kf)
+        if int(self.queue_max_batch) < 1:
+            raise ValueError(f"serve.queue_max_batch must be >= 1, "
+                             f"got {self.queue_max_batch}")
+        object.__setattr__(self, "queue_max_batch",
+                           int(self.queue_max_batch))
+        if int(self.queue_max_wait_us) < 0:
+            raise ValueError(f"serve.queue_max_wait_us must be >= 0, "
+                             f"got {self.queue_max_wait_us}")
+        object.__setattr__(self, "queue_max_wait_us",
+                           int(self.queue_max_wait_us))
 
 
 @dataclasses.dataclass(frozen=True)

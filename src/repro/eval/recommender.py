@@ -21,7 +21,15 @@ table (its slot budget priced against the fast tier by
 ``serving_profiles``), so Zipfian traffic streams only the cold tail;
 ``fused`` routes scoring through the fused gather+score+top-K kernel
 (auto on for device-resident item tables).  Both are bit-identical to
-the plain streamed path.
+the plain streamed path.  ``ann`` builds a block-pruned approximate-
+MIPS index (``repro.serving.ann.AnnIndex``) over the *served* item
+bytes — the index is constructed after placement, from exactly the
+(possibly int8-round-tripped) rows the exact stage will score, so its
+upper bounds stay valid for every storage arm — and routes
+``recommend()`` through the coarse-prune-then-exact path; its
+footprint is priced pinned-fast as ``serve/ann_index``.
+``keep_frac=1.0`` keeps every block and is bit-identical to the exact
+sweep (pinned by tests/test_serving.py).
 """
 from __future__ import annotations
 
@@ -37,6 +45,25 @@ from repro.memory import HostResident, TieredExecutor, get_policy, \
 from repro.pipeline.plan import serving_profiles
 from repro.pipeline.sparse import default_impl
 
+# NOTE: repro.serving.ann is imported lazily inside Recommender — it
+# consumes repro.eval.topk, so a module-level import here would cycle
+# through the package __init__.
+
+
+def _served_rows(table) -> np.ndarray:
+    """The dense fp32 view of whatever placement produced — the bytes a
+    gather will actually return (cache → its backing store; int8 →
+    the dequantized round-trip; device array → itself)."""
+    from repro.memory.cache import HotRowCache
+    from repro.memory.executor import QuantizedHostResident
+    if isinstance(table, HotRowCache):
+        return _served_rows(table.backing)
+    if isinstance(table, QuantizedHostResident):
+        return table.dense()
+    if isinstance(table, HostResident):
+        return np.asarray(table.arr, np.float32)
+    return np.asarray(table, np.float32)
+
 
 class Recommender:
     """Batched top-K retrieval over a snapshot of trained embeddings."""
@@ -47,13 +74,17 @@ class Recommender:
                  impl: str | None = None, hbm_budget: int | None = None,
                  topology: str = "tpu-hbm-host", policy: str = "greedy",
                  pins: dict | None = None, embed_store: str = "fp32",
-                 cache_rows: int = 0, fused: bool | None = None):
+                 cache_rows: int = 0, fused: bool | None = None,
+                 ann: bool = False, keep_frac: float = 1.0,
+                 ann_block: int | None = None, ann_reorder: str = "bisect"):
         self.k = int(k)
         self.user_batch = int(user_batch)
         self.item_block = int(item_block)
         self.impl = impl or default_impl()
         self.cache_rows = int(cache_rows)
         self.fused = fused
+        self.ann = bool(ann)
+        self.keep_frac = float(keep_frac)
         self.seen_indptr = None if seen_indptr is None \
             else np.asarray(seen_indptr, np.int64)
         self.seen_items = None if seen_items is None \
@@ -65,9 +96,17 @@ class Recommender:
         budgets = topo.capacities()
         if hbm_budget is not None:
             budgets[topo.fast.name] = int(hbm_budget)
+        from repro.serving.ann import (DEFAULT_ANN_BLOCK, AnnIndex,
+                                       ann_index_nbytes)
+        self.ann_block = int(ann_block) if ann_block is not None \
+            else DEFAULT_ANN_BLOCK
         row = int(item_e.shape[-1]) * item_e.dtype.itemsize
+        ann_bytes = ann_index_nbytes(int(item_e.shape[0]),
+                                     int(item_e.shape[-1]),
+                                     self.ann_block) if self.ann else 0
         profs = serving_profiles(user_e.nbytes, item_e.nbytes, row,
-                                 cache_rows=self.cache_rows)
+                                 cache_rows=self.cache_rows,
+                                 ann_index_bytes=ann_bytes)
         if embed_store == "int8":
             # demoted tables live quantized (~1/4 bytes): price the
             # placement on their stored footprint, serve via the
@@ -97,6 +136,14 @@ class Recommender:
             if not self.plan.is_fast(n))
         self.n_users = int(self.user_e.shape[0])
         self.n_items = int(self.item_e.shape[0])
+        # the ANN index summarizes the *served* bytes — built after
+        # placement so the bounds hold for the rows the exact stage will
+        # actually score (int8 dequant round-trip included)
+        self.ann_index = AnnIndex(_served_rows(self.item_e),
+                                  block=self.ann_block,
+                                  reorder=ann_reorder) if self.ann else None
+        if self.ann_index is not None:
+            self.ann_index.n_keep(self.keep_frac)   # fail fast on bad knob
 
     @classmethod
     def from_pipeline(cls, pipeline, state, **kw) -> "Recommender":
@@ -123,10 +170,20 @@ class Recommender:
             else (None, None)
         user_ids = np.asarray(user_ids)
         validate_user_ids(user_ids, self.n_users)
-        scores, ids = streaming_topk(
-            self.user_e, self.item_e, k, user_ids=user_ids,
-            seen_indptr=si, seen_items=sv, user_batch=self.user_batch,
-            item_block=self.item_block, impl=self.impl, fused=self.fused)
+        if self.ann_index is not None:
+            from repro.serving.ann import ann_topk
+            scores, ids = ann_topk(
+                self.ann_index, self.user_e, self.item_e, k,
+                keep_frac=self.keep_frac, user_ids=user_ids,
+                seen_indptr=si, seen_items=sv,
+                user_batch=self.user_batch, item_block=self.item_block,
+                impl=self.impl)
+        else:
+            scores, ids = streaming_topk(
+                self.user_e, self.item_e, k, user_ids=user_ids,
+                seen_indptr=si, seen_items=sv, user_batch=self.user_batch,
+                item_block=self.item_block, impl=self.impl,
+                fused=self.fused)
         return ids, scores
 
     def cache_stats(self) -> dict[str, dict]:
@@ -154,10 +211,14 @@ class Recommender:
                      f"streamed={s['bytes_streamed']}B"
                      for n, s in stats.items()]
             cache = f" cache[{'; '.join(parts)}]"
+        ann = ""
+        if self.ann_index is not None:
+            ann = (f" ann[{self.ann_index.describe()} "
+                   f"keep_frac={self.keep_frac:g}]")
         return (f"Recommender[{self.n_users}U x {self.n_items}I] "
                 f"impl={self.impl} k={self.k} block={self.item_block} "
                 f"topology={self.plan.topology.name} "
                 f"policy={self.plan.policy} "
                 f"user_embed->{tiers['serve/user_embed']} "
                 f"item_embed->{tiers['serve/item_embed']} "
-                f"(offloaded={self.n_offloaded}){cache}")
+                f"(offloaded={self.n_offloaded}){cache}{ann}")

@@ -17,6 +17,7 @@ import warnings
 import jax
 
 from repro.core import sparse_ops
+from repro.kernels import ann as _ann
 from repro.kernels import embedding_bag as _eb
 from repro.kernels import hadamard_spmm as _hspmm
 from repro.kernels import ref as _ref
@@ -82,6 +83,17 @@ def embedding_bag(table, ids, mask, combiner="sum", impl="xla", **kw):
         return _ref.embedding_bag_ref(table, ids, mask, combiner)
     return _eb.embedding_bag_pallas(table, ids, mask, combiner,
                                     interpret=not _on_tpu(), **kw)
+
+
+def ann_block_scores(ue, centroids_q, scale, radius, impl="xla", **kw):
+    """ANN coarse stage: per-block score *upper bounds* over int8 block
+    centroids — ``(u·ĉ_b)·scale_b + ‖u‖·radius_b``, f32[B, n_blocks].
+    The serving ANN index prunes item blocks on this bound before the
+    exact gather + ``fused_topk_score`` merge (``repro.serving.ann``)."""
+    if impl == "xla":
+        return _ref.ann_block_scores_ref(ue, centroids_q, scale, radius)
+    return _ann.ann_block_scores_pallas(ue, centroids_q, scale, radius,
+                                        interpret=not _on_tpu(), **kw)
 
 
 def fused_topk_score(ue, table, seen, seen_mask, *, k, n_items,

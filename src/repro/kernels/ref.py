@@ -71,6 +71,23 @@ def embedding_bag_ref(table: jax.Array, ids: jax.Array, mask: jax.Array,
     return out
 
 
+@jax.jit
+def ann_block_scores_ref(ue: jax.Array, centroids_q: jax.Array,
+                         scale: jax.Array, radius: jax.Array) -> jax.Array:
+    """XLA oracle for the ANN coarse stage: per-block score upper bounds
+    ``(u · ĉ_b)·scale_b + ‖u‖₂·radius_b`` over int8 block centroids.
+    ue: f32[B, D]; centroids_q: i8[nb, D]; scale/radius: f32[nb] ->
+    f32[B, nb].  The bound dominates every block member's exact score
+    (see ``repro.serving.ann``), so pruning on it never drops a
+    candidate whose bound clears the shortlist cut."""
+    ue = ue.astype(jnp.float32)
+    cent = centroids_q.astype(jnp.float32)
+    dots = jnp.dot(ue, cent.T, preferred_element_type=jnp.float32)
+    dots = dots * scale[None, :].astype(jnp.float32)
+    unorm = jnp.sqrt(jnp.sum(ue * ue, axis=1, keepdims=True))
+    return dots + unorm * radius[None, :].astype(jnp.float32)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "item_block", "n_items"))
 def fused_topk_score_ref(ue: jax.Array, table: jax.Array, seen: jax.Array,
                          seen_mask: jax.Array, *, k: int, item_block: int,

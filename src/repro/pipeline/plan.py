@@ -128,7 +128,8 @@ def derive_eval_batch(free_hbm: int, out_dim: int, k: int, item_block: int,
 
 def serving_profiles(user_nbytes: int, item_nbytes: int, row: int,
                      user_fraction: float = 0.05,
-                     cache_rows: int = 0) -> list[AccessProfile]:
+                     cache_rows: int = 0,
+                     ann_index_bytes: int = 0) -> list[AccessProfile]:
     """AccessProfiles for the serving snapshot: every query batch streams
     the full item table block-by-block (read 1.0×/step), but gathers only
     the batch's rows of the user table (``user_fraction``×/step) — so
@@ -139,7 +140,14 @@ def serving_profiles(user_nbytes: int, item_nbytes: int, row: int,
     fast tier (a pinned-fast reservation: slot store + per-slot
     bookkeeping, priced at 2 rows/slot) — the knapsack sees the cache
     budget as spent and may legitimately demote a table the cache then
-    serves."""
+    serves.
+
+    ``ann_index_bytes`` prices the ANN index's coarse summaries
+    (``serving.ann.ann_index_nbytes``: int8 block centroids + bound
+    terms + the item permutation) the same way: pinned fast, because the
+    coarse stage runs on *every* query batch and exists precisely to
+    avoid touching the slow tier — a demoted index would re-add the
+    traffic it prunes."""
     profs = [
         AccessProfile("serve/user_embed", int(user_nbytes),
                       reads_per_step=user_fraction, writes_per_step=0.0,
@@ -152,6 +160,10 @@ def serving_profiles(user_nbytes: int, item_nbytes: int, row: int,
         profs.append(AccessProfile("serve/hot_cache",
                                    int(2 * cache_rows * row),
                                    reads_per_step=0.0, writes_per_step=0.0,
+                                   access_size=row, pinned="fast"))
+    if ann_index_bytes > 0:
+        profs.append(AccessProfile("serve/ann_index", int(ann_index_bytes),
+                                   reads_per_step=1.0, writes_per_step=0.0,
                                    access_size=row, pinned="fast"))
     return profs
 

@@ -1,0 +1,28 @@
+"""Production serving subsystem: request coalescing + block-pruned ANN
+retrieval + the service facade (ROADMAP item 1).
+
+  ``queue``    microbatcher — max-batch/max-wait coalescing under an
+               injectable clock, pow2 pad-to-bucket shapes, bounded-
+               depth backpressure.
+  ``ann``      approximate-MIPS index — int8 block centroids + score
+               upper bounds prune item blocks before the exact fused
+               top-K merge; ``keep_frac=1.0`` is bit-identical to
+               ``eval.topk.streaming_topk``.
+  ``service``  ``RecommenderService`` — queue → ANN → ``Recommender``
+               with queue-depth / occupancy / hit-rate / p50 / p99
+               stats.
+"""
+from repro.serving.ann import (DEFAULT_ANN_BLOCK, AnnIndex,
+                               ann_index_nbytes, ann_topk, recall_against)
+from repro.serving.queue import (Batch, Clock, ManualClock, QueueFull,
+                                 Request, RequestQueue, WallClock,
+                                 bucket_for)
+from repro.serving.service import RecommenderService, Response
+
+__all__ = [
+    "DEFAULT_ANN_BLOCK", "AnnIndex", "ann_index_nbytes", "ann_topk",
+    "recall_against",
+    "Batch", "Clock", "ManualClock", "QueueFull", "Request",
+    "RequestQueue", "WallClock", "bucket_for",
+    "RecommenderService", "Response",
+]

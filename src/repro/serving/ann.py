@@ -1,0 +1,376 @@
+"""Block-pruned approximate-MIPS retrieval over the item table.
+
+The streaming scorer (``eval.topk.streaming_topk``) is *exact*: every
+query batch scores every item block.  At the paper's serving scale
+(millions of users against a capacity-tier catalogue) that is the
+dominant cost, and almost all of it is wasted — a user's top-K items
+live in a handful of embedding-space neighbourhoods.  ``AnnIndex`` is
+the classic IVF/block-max answer, shaped to this repo's invariants:
+
+  build   items are reordered so embedding-space neighbours share
+          fixed-size *index blocks* (``reorder='bisect'``: recursive
+          PCA median splits — deterministic, exactly balanced, no
+          Lloyd convergence hazard; ``'none'`` keeps catalogue order);
+          each block keeps an int8-quantized centroid and a radius =
+          max member distance to the centroid **plus** the centroid's
+          own quantization error.
+
+  query   1. coarse: ``kernels.ops.ann_block_scores`` scans every
+             block's summary in one tiny ``[B, n_blocks]`` launch —
+             ``(u·ĉ_b)·scale_b + ‖u‖·radius_b``.  With the radius term
+             this is a *valid score upper bound* (Cauchy-Schwarz:
+             ``u·x ≤ ub`` for every member ``x`` — pinned by
+             tests/test_serving.py); with the radius zeroed it is the
+             IVF probing affinity ``u·ĉ_b·scale_b``.
+          2. prune: blocks are ranked per user by affinity (the bound's
+             radius term scales with worst-case block impurity, which
+             would let one loose block outrank genuinely close ones —
+             affinity ranking is what IVF systems probe with), then the
+             ``ceil(keep_frac · n_blocks)`` best survive by rank-voting
+             across the microbatch (a block's priority is the best rank
+             any user gave it; ties toward lower id — deterministic).
+          3. exact: the survivors' rows are gathered **in ascending
+             global-id order** (through whatever facade the placement
+             produced — ``HostResident``, ``QuantizedHostResident`` or
+             the ``HotRowCache``, so pruning directly cuts slow-tier
+             bytes) and merged through the existing
+             ``kernels.ops.fused_topk_score`` dispatch at the caller's
+             ``item_block`` (decoupled from the index's finer blocks).
+
+Because the candidate matrix is id-sorted and the exact stage runs the
+very ops of the streamed merge at the same merge block size,
+``keep_frac=1.0`` keeps every block and is **bit-identical** to
+``streaming_topk`` — same scores, same (score desc, id asc) tie
+contract, for device-resident, int8-stored and cached tables alike
+(pinned by tests/test_serving.py).  Candidate-count shapes are static
+per ``(index, keep_frac)``, so the exact stage traces once and
+``hlo_audit.recompile_hazard``-style shape churn cannot occur.
+
+Pruning quality scales with microbatch coherence: every user's top-j
+affinity blocks are kept whenever ``n_keep >= j * batch``, so the
+request queue's small skew-coherent microbatches are the natural
+pruning unit (the load bench measures exactly this composition).
+
+The planner prices the index footprint (centroids + bounds + the item
+permutation) as a pinned-fast ``serve/ann_index`` profile
+(``pipeline.plan.serving_profiles(ann_index_bytes=...)``).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.eval.topk import (DEFAULT_ITEM_BLOCK, DEFAULT_USER_BATCH, NEG_INF,
+                             _gather_rows, _padded_seen, validate_user_ids)
+from repro.kernels import ops as kops
+from repro.memory.executor import HostResident
+from repro.pipeline.sparse import default_impl
+
+_ID_SENTINEL = np.iinfo(np.int32).max
+DEFAULT_ANN_BLOCK = 64      # index granularity: fine blocks select well
+
+
+def ann_index_nbytes(n_items: int, dim: int, block: int) -> int:
+    """Static index footprint for planner pricing (before the index is
+    built): int8 centroids + fp32 scale/radius per block + the int32
+    item permutation."""
+    n_blocks = max(1, math.ceil(n_items / max(block, 1)))
+    return n_blocks * dim + 8 * n_blocks + 4 * n_items
+
+
+def _bisect_order(items: np.ndarray, n_blocks: int) -> np.ndarray:
+    """Pack embedding-space neighbours into contiguous slots by
+    recursive PCA median splits (a balanced kd-cut): each subset is
+    halved at the median of its principal-direction projection until
+    ``ceil(log2(n_blocks))`` levels deep.  Exactly balanced (leaf sizes
+    differ by at most 1), deterministic (power iteration from a fixed
+    vector, stable sorts), and free of the empty/duplicate-centroid
+    hazards of Lloyd iterations.  Chunks of ``block`` consecutive slots
+    become the index blocks; the per-block centroid/radius are computed
+    from the *actual* chunk members afterwards, so bounds stay valid
+    even where a chunk straddles a leaf boundary."""
+    levels = max(math.ceil(math.log2(max(n_blocks, 1))), 0)
+
+    def split(ids: np.ndarray, depth: int) -> list[np.ndarray]:
+        if depth == 0 or len(ids) <= 1:
+            return [ids]
+        x = items[ids]
+        xc = x - x.mean(axis=0)
+        v = np.ones(x.shape[1], np.float32)
+        for _ in range(8):            # power iteration on the covariance
+            v = xc.T @ (xc @ v)
+            v /= max(np.linalg.norm(v), np.finfo(np.float32).tiny)
+        srt = ids[np.argsort(xc @ v, kind="stable")]
+        half = len(ids) // 2
+        return split(srt[:half], depth - 1) + split(srt[half:], depth - 1)
+
+    parts = split(np.arange(len(items), dtype=np.int64), levels)
+    return np.concatenate(parts)
+
+
+class AnnIndex:
+    """Per-block coarse summaries over a (reordered) item table.
+
+    Holds no item rows itself — only the permutation, the int8 centroid
+    table and the per-block bound terms; the exact stage gathers rows
+    from whatever table object serving placed (device array or a
+    ``HostResident``-family facade)."""
+
+    def __init__(self, item_e, *, block: int = DEFAULT_ANN_BLOCK,
+                 reorder: str = "bisect"):
+        if reorder not in ("bisect", "none"):
+            raise ValueError(f"ann reorder must be 'bisect' or 'none', "
+                             f"got {reorder!r}")
+        items = np.asarray(item_e, np.float32)
+        self.n_items, self.dim = int(items.shape[0]), int(items.shape[1])
+        self.blk = int(min(max(block, 1), max(self.n_items, 1)))
+        self.n_blocks = max(1, math.ceil(self.n_items / self.blk))
+        self.reorder = reorder
+        if reorder == "bisect" and self.n_blocks > 1:
+            self.order = _bisect_order(items, self.n_blocks)
+        else:
+            self.order = np.arange(self.n_items, dtype=np.int64)
+        # per-block summaries from the actual chunk members
+        nb, blk = self.n_blocks, self.blk
+        cent = np.zeros((nb, self.dim), np.float32)
+        radius = np.zeros(nb, np.float32)
+        for b in range(nb):
+            members = items[self.order[b * blk:(b + 1) * blk]]
+            c = members.mean(axis=0)
+            cent[b] = c
+            radius[b] = np.linalg.norm(members - c, axis=1).max()
+        # int8 symmetric centroid quantization; the dequantization error
+        # is folded into the radius so the bound survives quantization
+        self.scale = np.maximum(np.abs(cent).max(axis=1) / 127.0,
+                                np.finfo(np.float32).tiny).astype(np.float32)
+        self.centroids_q = np.clip(
+            np.rint(cent / self.scale[:, None]), -127, 127).astype(np.int8)
+        dequant = self.centroids_q.astype(np.float32) * self.scale[:, None]
+        self.radius = (radius + np.linalg.norm(cent - dequant, axis=1)
+                       ).astype(np.float32)
+        # device-side copies for the coarse kernel (tiny, pinned fast by
+        # the serve/ann_index profile)
+        self._cq_dev = jnp.asarray(self.centroids_q)
+        self._scale_dev = jnp.asarray(self.scale)
+        self._radius_dev = jnp.asarray(self.radius)
+        self._zero_dev = jnp.zeros_like(self._radius_dev)
+
+    @property
+    def nbytes(self) -> int:
+        return (self.centroids_q.nbytes + self.scale.nbytes
+                + self.radius.nbytes + 4 * self.n_items)
+
+    def n_keep(self, keep_frac: float) -> int:
+        if not 0.0 < float(keep_frac) <= 1.0:
+            raise ValueError(f"keep_frac must be in (0, 1], got {keep_frac}")
+        return int(min(self.n_blocks,
+                       max(1, math.ceil(float(keep_frac) * self.n_blocks))))
+
+    def block_bounds(self, ue, n_valid: int, impl: str) -> np.ndarray:
+        """Per-block score **upper bounds** for the first ``n_valid``
+        rows of a (possibly padded) staged user batch —
+        f32[n_valid, n_blocks].  Valid: every member's exact score is
+        ``<=`` its block's bound (the Cauchy-Schwarz radius term)."""
+        ub = kops.ann_block_scores(ue, self._cq_dev, self._scale_dev,
+                                   self._radius_dev, impl=impl)
+        return np.asarray(ub)[:n_valid]
+
+    def block_affinity(self, ue, n_valid: int, impl: str) -> np.ndarray:
+        """Per-block probing affinities ``(u·ĉ_b)·scale_b`` — the same
+        coarse kernel with the radius term zeroed.  This is what blocks
+        are *ranked* by: the bound's radius scales with worst-case block
+        impurity, so ranking on it would let one loose block outrank
+        genuinely close ones (the IVF argument)."""
+        aff = kops.ann_block_scores(ue, self._cq_dev, self._scale_dev,
+                                    self._zero_dev, impl=impl)
+        return np.asarray(aff)[:n_valid]
+
+    def select_blocks(self, affinity: np.ndarray, keep_frac: float
+                      ) -> np.ndarray:
+        """The shared shortlist: each user ranks every block by its own
+        affinity (descending, ties toward lower block id); a block's
+        priority is the best rank any user gave it, and the ``n_keep``
+        best-priority blocks survive (priority ties toward lower id).
+
+        Rank-voting rather than batch-max-affinity: affinities scale
+        with the querying user's norm, so a max across users would let
+        one large-norm user's blocks crowd out everyone else's.  Ranks
+        are norm-invariant — every user's argmax block is kept whenever
+        ``n_keep >= batch``, and each user's top-``j`` blocks whenever
+        ``n_keep >= j * batch``.  Returned sorted ascending;
+        deterministic for a given (batch, index).
+
+        Only ranks below ``n_keep`` can influence the outcome (user 0
+        alone gives ``n_keep`` blocks a better priority than any
+        truncated block), so each user's ranking is an O(n_blocks)
+        partition of unique (affinity, id) sort keys — float bits
+        made order-preserving under integer compare, block id packed
+        into the low half so ties are broken by lower id and keys never
+        collide — not a full argsort."""
+        n_keep = self.n_keep(keep_frac)
+        nb = self.n_blocks
+        ids32 = np.arange(nb, dtype=np.uint64)
+        # unique uint64 keys ordering by (affinity desc, id asc):
+        # negate (canonicalizing -0.0 so +/-0.0 still tie), map float
+        # bits monotonically onto uint32, append the id as low bits
+        neg = np.ascontiguousarray(-np.asarray(affinity, np.float32)) \
+            + np.float32(0.0)
+        fb = neg.view(np.int32)
+        mono = (fb ^ ((fb >> 31) | np.int32(-2**31))).view(np.uint32)
+        keys = (mono.astype(np.uint64) << np.uint64(32)) | ids32[None, :]
+        top = np.partition(keys, n_keep - 1, axis=1)[:, :n_keep] \
+            if n_keep < nb else keys.copy()
+        top.sort(axis=1)                 # column index == per-user rank
+        top_ids = (top & np.uint64(0xFFFFFFFF)).astype(np.int64)
+        priority = np.full(nb, nb, np.int64)
+        np.minimum.at(priority, top_ids.ravel(),
+                      np.broadcast_to(np.arange(n_keep),
+                                      top_ids.shape).ravel())
+        # n_keep best (priority, id) pairs via the same packed-key trick
+        keys2 = (priority.astype(np.uint64) << np.uint64(32)) | ids32
+        best = np.partition(keys2, n_keep - 1)[:n_keep] \
+            if n_keep < nb else keys2
+        return np.sort((best & np.uint64(0xFFFFFFFF)).astype(np.int64))
+
+    def candidate_ids(self, kept: np.ndarray) -> tuple[np.ndarray, int]:
+        """Global item ids of the kept blocks, sorted ascending and
+        padded with ``_ID_SENTINEL`` to the static ``n_keep·blk`` width.
+        Returns (ids i64[C], n_valid).  Ascending order is what makes
+        the exact stage's positional tie-break equal the global
+        (score desc, id asc) contract."""
+        slots = (kept[:, None] * self.blk + np.arange(self.blk)[None, :]
+                 ).ravel()
+        valid = slots < self.n_items
+        ids = np.full(len(slots), _ID_SENTINEL, np.int64)
+        ids[valid] = self.order[slots[valid]]
+        ids.sort()                       # sentinels land at the tail
+        return ids, int(valid.sum())
+
+    def describe(self) -> str:
+        return (f"AnnIndex[{self.n_items}I x {self.dim}D] "
+                f"blocks={self.n_blocks}x{self.blk} reorder={self.reorder} "
+                f"index={self.nbytes}B")
+
+
+@jax.jit
+def _take_rows(table, ids):
+    """Jitted device row gather for the candidate matrix (a plain take —
+    bit-exact row copies, one dispatch per batch)."""
+    return jnp.take(table, ids, axis=0)
+
+
+def _gather_candidates(item_e, ids: np.ndarray, n_valid: int, dim: int):
+    """Candidate rows for the exact stage, through the placed table:
+    HostResident-family facades stream (and cache-count) only the valid
+    rows; device tables gather in place.  Pad slots carry row 0 — they
+    are position-masked by ``n_items=n_valid`` in the fused merge."""
+    if isinstance(item_e, HostResident):
+        rows = np.zeros((len(ids), dim), np.float32)
+        rows[:n_valid] = np.asarray(item_e.block(ids[:n_valid]), np.float32)
+        return jnp.asarray(rows)
+    safe = np.where(ids < _ID_SENTINEL, ids, 0).astype(np.int32)
+    return _take_rows(item_e, jnp.asarray(safe))
+
+
+def ann_topk(index: AnnIndex, user_e, item_e, k: int, *,
+             keep_frac: float = 1.0, user_ids=None,
+             seen_indptr=None, seen_items=None,
+             user_batch: int = DEFAULT_USER_BATCH,
+             item_block: int = DEFAULT_ITEM_BLOCK,
+             impl: str | None = None):
+    """Approximate top-K through the block-pruned index — the drop-in
+    counterpart of ``eval.topk.streaming_topk`` (same signature shape,
+    same (scores, ids) return contract, same -1/-inf invalid slots).
+    ``item_block`` is the *exact-merge* block size (the index's own
+    finer blocks only drive selection); with the same ``item_block``
+    the exact sweep uses, ``keep_frac=1.0`` scans every block and is
+    bit-identical to the streamed result."""
+    impl = impl or default_impl()
+    user_host = user_e if isinstance(user_e, HostResident) else None
+    if user_host is None:
+        user_e = jnp.asarray(user_e)
+    if not isinstance(item_e, HostResident):
+        item_e = jnp.asarray(item_e)     # device-resident once per sweep,
+                                         # not re-uploaded per batch gather
+    n_users = int(user_e.shape[0])
+    if user_ids is None:
+        user_ids = np.arange(n_users, dtype=np.int32)
+    user_ids = np.asarray(user_ids, np.int32)
+    validate_user_ids(user_ids, n_users)
+    n_q = len(user_ids)
+    k = int(k)
+    index.n_keep(keep_frac)              # validate before any work
+    if n_q == 0 or index.n_items == 0:
+        return (np.full((n_q, k), NEG_INF, np.float32),
+                np.full((n_q, k), -1, np.int32))
+    ub = int(min(user_batch, n_q))
+    max_deg = 0
+    if seen_indptr is not None:
+        seen_indptr = np.asarray(seen_indptr, np.int64)
+        seen_items = np.asarray(seen_items, np.int64)
+        max_deg = int(np.diff(seen_indptr)[user_ids].max())
+    out_s = np.full((n_q, k), NEG_INF, np.float32)
+    out_i = np.full((n_q, k), -1, np.int32)
+
+    # stage ALL query user rows + coarse affinities up front: one gather
+    # and one coarse-kernel launch for the whole sweep (the per-batch
+    # python loop below then only sorts, gathers candidates and merges —
+    # dispatch overhead must not eat the pruned compute)
+    n_pad = math.ceil(n_q / ub) * ub
+    ids_p = np.pad(user_ids, (0, n_pad - n_q))
+    ue_all = jnp.asarray(user_host.take(ids_p)) if user_host is not None \
+        else _gather_rows(user_e, ids_p, impl)
+    aff_all = index.block_affinity(ue_all, n_q, impl)
+
+    for lo in range(0, n_q, ub):
+        sel = user_ids[lo:lo + ub]
+        b = len(sel)
+        sel_p = ids_p[lo:lo + ub]            # padded batch: static shape
+        ue = jax.lax.dynamic_slice_in_dim(ue_all, lo, ub, axis=0)
+        # 1. coarse affinities (real rows only: padded rows must not vote)
+        affinity = aff_all[lo:lo + b]
+        # 2. prune to the shortlist
+        kept = index.select_blocks(affinity, keep_frac)
+        cand_ids, n_valid = index.candidate_ids(kept)
+        # 3. exact merge over the id-sorted candidates
+        cand = _gather_candidates(item_e, cand_ids, n_valid, index.dim)
+        if seen_indptr is not None:
+            seen, smask = _padded_seen(sel_p, seen_indptr, seen_items,
+                                       max_deg)
+        else:
+            seen = np.zeros((ub, 0), np.int64)
+            smask = np.zeros((ub, 0), bool)
+        # seen ids -> candidate positions (id-sorted, so searchsorted);
+        # out-of-shortlist seen items simply aren't candidates
+        pos = np.searchsorted(cand_ids, seen)
+        pos_c = np.minimum(pos, len(cand_ids) - 1)
+        smask = smask & (cand_ids[pos_c] == seen)
+        top_s, top_p = kops.fused_topk_score(
+            ue, cand, jnp.asarray(pos_c.astype(np.int32)),
+            jnp.asarray(smask), k=k, n_items=n_valid,
+            item_block=int(min(item_block, max(n_valid, 1))), impl=impl)
+        # candidate positions -> global ids (invalid slots stay -1)
+        top_p = np.asarray(top_p)
+        ids_g = np.where(top_p >= 0,
+                         cand_ids[np.maximum(top_p, 0)], -1).astype(np.int32)
+        out_s[lo:lo + b] = np.asarray(top_s)[:b]
+        out_i[lo:lo + b] = ids_g[:b]
+    return out_s, out_i
+
+
+def recall_against(exact_ids: np.ndarray, approx_ids: np.ndarray) -> float:
+    """Mean per-user recall of ``approx_ids`` against ``exact_ids``
+    (both [n, k]; -1 slots ignored) — the ANN quality metric the bench
+    and tests floor at 0.95."""
+    hits, total = 0, 0
+    for ex, ap in zip(np.asarray(exact_ids), np.asarray(approx_ids)):
+        truth = set(int(i) for i in ex if i >= 0)
+        if not truth:
+            continue
+        got = set(int(i) for i in ap if i >= 0)
+        hits += len(truth & got)
+        total += len(truth)
+    return hits / total if total else 1.0

@@ -445,3 +445,39 @@ def test_cache_on_off_bit_identity_sweep(embed_store):
             i1, s1 = cached.recommend(q)
             np.testing.assert_array_equal(i0, i1)
             np.testing.assert_array_equal(s0, s1)
+
+
+# --------------------------------------------------- ann coarse kernel
+@pytest.mark.parametrize("b,nb,d", [
+    (9, 37, 12),       # nothing tile-aligned
+    (1, 1, 130),       # single user, single block, D over one lane tile
+    (7, 129, 8),       # n_blocks just over the 128-lane tile
+])
+def test_ann_block_scores_pallas_matches_xla(b, nb, d):
+    """The ANN coarse stage (int8 centroid dot + norm·radius bound) on
+    adversarial shapes: pallas interpret vs the kernels/ref.py oracle,
+    through the ops dispatch both ways."""
+    from repro.kernels import ops as kops
+    rng = np.random.default_rng(hash((b, nb, d)) % 2**31)
+    ue = rng.standard_normal((b, d)).astype(np.float32)
+    cq = rng.integers(-127, 128, (nb, d)).astype(np.int8)
+    scale = rng.uniform(1e-3, 0.1, nb).astype(np.float32)
+    radius = rng.uniform(0.0, 2.0, nb).astype(np.float32)
+    args = (jnp.asarray(ue), jnp.asarray(cq), jnp.asarray(scale),
+            jnp.asarray(radius))
+    want = ref.ann_block_scores_ref(*args)
+    got = kops.ann_block_scores(*args, impl="pallas")
+    assert got.shape == (b, nb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(
+        np.asarray(kops.ann_block_scores(*args, impl="xla")),
+        np.asarray(want))
+    # radius=0 degenerates to the pure centroid affinity (what the
+    # serving index ranks blocks by)
+    aff = kops.ann_block_scores(args[0], args[1], args[2],
+                                jnp.zeros(nb, jnp.float32), impl="pallas")
+    np.testing.assert_allclose(
+        np.asarray(aff), np.asarray(ue @ (cq.astype(np.float32)
+                                          * scale[:, None]).T),
+        rtol=1e-5, atol=1e-5)

@@ -1,6 +1,7 @@
 """Serving hot-path tests (fast tier): fused-kernel routing, the
 block-major staging fix, uniform user-id validation, the HotRowCache,
-its planner pricing, ServeCfg, and the BENCH artifact plumbing.
+its planner pricing, the ANN block-pruned index, the request-coalescing
+queue + RecommenderService, ServeCfg, and the BENCH artifact plumbing.
 
 All equality checks are exact (integer-valued embeddings make f32 dot
 products exact), so "bit-identical" below means assert_array_equal."""
@@ -18,6 +19,9 @@ from repro.memory import (CacheStats, HostResident, HotRowCache,
                           QuantizedHostResident, TieredExecutor, get_policy,
                           get_topology)
 from repro.pipeline.plan import serving_profiles
+from repro.serving import (AnnIndex, ManualClock, QueueFull,
+                           RecommenderService, RequestQueue, ann_index_nbytes,
+                           ann_topk, bucket_for, recall_against)
 
 
 def _tables(seed=0, nu=30, ni=50, d=16):
@@ -265,6 +269,246 @@ def test_executor_cache_stats_and_describe():
         TieredExecutor(plan, cache_rows=-1)
 
 
+# ------------------------------------------------------------- ANN: parity
+@pytest.mark.parametrize("block", [16, 13])      # aligned + ragged tail
+def test_ann_keep_all_bitwise_matches_streaming(block):
+    """keep_frac=1.0 scans every block and must be bit-identical to the
+    exact streamed sweep — scores, ids, and the (score desc, id asc)
+    tie order — including seen-exclusion."""
+    ue, ie, indptr, items = _tables(seed=11, nu=25, ni=70)
+    index = AnnIndex(ie, block=block)
+    kw = dict(seen_indptr=indptr, seen_items=items, user_batch=7,
+              item_block=16)
+    qs = np.asarray([0, 3, 24, 3, 17], np.int32)
+    es, ei = streaming_topk(ue, ie, 5, user_ids=qs, **kw)
+    ps, pi = ann_topk(index, ue, ie, 5, keep_frac=1.0, user_ids=qs, **kw)
+    np.testing.assert_array_equal(es, ps)
+    np.testing.assert_array_equal(ei, pi)
+
+
+@pytest.mark.parametrize("store", ["int8", "cached"])
+def test_ann_keep_all_bitwise_through_placements(store):
+    """The index is built from the *served* bytes, so keep_frac=1.0
+    stays bit-identical when the item table is int8-stored or sits
+    behind the HotRowCache."""
+    ue, ie, indptr, items = _tables(seed=13, nu=20, ni=64)
+    kw = dict(seen_indptr=indptr, seen_items=items, k=6, user_batch=8,
+              topology="uniform", pins={"serve/item_embed": "slow"})
+    if store == "int8":
+        kw["embed_store"] = "int8"
+    else:
+        kw["cache_rows"] = 16
+    exact = Recommender(ue, ie, **kw)
+    ann = Recommender(ue, ie, ann=True, keep_frac=1.0, ann_block=16, **kw)
+    q = np.asarray([1, 5, 19, 5])
+    i0, s0 = exact.recommend(q)
+    i1, s1 = ann.recommend(q)
+    np.testing.assert_array_equal(i0, i1)
+    np.testing.assert_array_equal(s0, s1)
+    assert "ann[" in ann.describe()
+
+
+def test_ann_bound_dominates_member_scores():
+    """block_bounds is a valid per-block score upper bound: no member's
+    exact score may exceed its block's bound (Cauchy-Schwarz + the
+    quantization-error inflation)."""
+    rng = np.random.default_rng(3)
+    ie = rng.standard_normal((500, 12)).astype(np.float32)
+    ue = rng.standard_normal((9, 12)).astype(np.float32)
+    index = AnnIndex(ie, block=32)
+    bounds = index.block_bounds(ue, len(ue), impl="xla")
+    exact = ue @ ie.T                                       # [9, 500]
+    for b in range(index.n_blocks):
+        members = index.order[b * index.blk:(b + 1) * index.blk]
+        best = exact[:, members].max(axis=1)
+        assert np.all(best <= bounds[:, b] + 1e-4), f"block {b}"
+
+
+def test_ann_pruned_recall_floor_on_zipf_stream():
+    """A genuinely pruned configuration (keep_frac=0.25) must keep
+    recall@10 >= 0.95 against the exact sweep on a power-law stream
+    over a clustered catalogue."""
+    rng = np.random.default_rng(3)
+    n_items, dim, nc = 8192, 16, 64
+    centers = rng.normal(0, 1.0, (nc, dim)).astype(np.float32)
+    ie = (centers[rng.integers(0, nc, n_items)]
+          + 0.05 * rng.normal(0, 1, (n_items, dim))).astype(np.float32)
+    ue = (centers[rng.integers(0, nc, 256)]
+          + 0.3 * rng.normal(0, 1, (256, dim))).astype(np.float32)
+    perm = rng.permutation(256)
+    stream = perm[np.minimum(rng.zipf(1.3, 256) - 1, 255)][:64] \
+        .astype(np.int32)
+    index = AnnIndex(ie, block=32)
+    _, exact_ids = streaming_topk(ue, ie, 10, user_ids=stream, user_batch=8)
+    _, ann_ids = ann_topk(index, ue, ie, 10, keep_frac=0.25,
+                          user_ids=stream, user_batch=8)
+    rec = recall_against(exact_ids, ann_ids)
+    assert rec >= 0.95, f"pruned recall@10 {rec:.3f} < 0.95"
+    # pruning really happened: the shortlist is a strict block subset
+    assert index.n_keep(0.25) < index.n_blocks
+    assert recall_against(exact_ids, exact_ids) == 1.0
+
+
+def test_ann_select_blocks_rank_voting_and_determinism():
+    rng = np.random.default_rng(0)
+    index = AnnIndex(rng.standard_normal((256, 8)).astype(np.float32),
+                     block=8)                       # 32 blocks
+    aff = rng.standard_normal((4, index.n_blocks)).astype(np.float32)
+    kept = index.select_blocks(aff, 0.25)           # n_keep = 8 >= batch
+    assert np.array_equal(kept, index.select_blocks(aff.copy(), 0.25))
+    assert np.array_equal(kept, np.sort(kept))      # ascending contract
+    for u in range(4):                              # every argmax survives
+        assert int(np.argmax(aff[u])) in kept
+    # all-equal affinities: ties break toward lower block id
+    flat = np.zeros((2, index.n_blocks), np.float32)
+    np.testing.assert_array_equal(index.select_blocks(flat, 0.25),
+                                  np.arange(8))
+
+
+def test_ann_knob_validation_and_pricing():
+    rng = np.random.default_rng(1)
+    ie = rng.standard_normal((100, 8)).astype(np.float32)
+    index = AnnIndex(ie, block=16)
+    for bad in (0.0, -0.1, 1.5):
+        with pytest.raises(ValueError, match="keep_frac"):
+            index.n_keep(bad)
+    with pytest.raises(ValueError, match="reorder"):
+        AnnIndex(ie, reorder="kmeans")
+    # the static pricing formula equals the built index's footprint
+    assert ann_index_nbytes(100, 8, 16) == index.nbytes
+    # planner profile: pinned fast, only present when ann is on
+    profs = serving_profiles(1000, 1000, row=32,
+                             ann_index_bytes=index.nbytes)
+    ann_prof = {p.name: p for p in profs}["serve/ann_index"]
+    assert ann_prof.pinned == "fast" and ann_prof.nbytes == index.nbytes
+    assert "serve/ann_index" not in {
+        p.name for p in serving_profiles(1000, 1000, row=32)}
+    rec = Recommender(ie[:50], ie, ann=True, ann_block=16,
+                      topology="uniform")
+    assert rec.plan.is_fast("serve/ann_index")
+    with pytest.raises(ValueError, match="keep_frac"):
+        Recommender(ie[:50], ie, ann=True, keep_frac=0.0,
+                    topology="uniform")
+
+
+# ------------------------------------------------------- coalescing queue
+def test_bucket_ladder():
+    assert [bucket_for(n, 64) for n in (1, 2, 3, 5, 9, 64)] == \
+        [1, 2, 4, 8, 16, 64]
+    assert bucket_for(65, 64) == 64                 # capped at max_batch
+    with pytest.raises(ValueError, match="n >= 1"):
+        bucket_for(0, 64)
+
+
+def test_queue_two_trigger_dispatch_under_manual_clock():
+    clock = ManualClock()
+    q = RequestQueue(max_batch=4, max_wait_us=100, clock=clock)
+    q.submit(7)
+    assert not q.ready() and q.next_batch() is None  # neither trigger yet
+    assert q.next_deadline_us() == 100
+    clock.advance(99)
+    assert not q.ready()
+    clock.advance(1)                                 # deadline trigger
+    assert q.ready()
+    batch = q.next_batch()
+    assert batch.user_ids == (7,) and batch.bucket == 1
+    assert batch.wait_us == (100,)
+    for uid in (1, 2, 3, 4):                         # occupancy trigger
+        q.submit(uid)
+    assert q.ready()                                 # full, no wait needed
+    batch = q.next_batch()
+    assert batch.user_ids == (1, 2, 3, 4) and batch.occupancy == 1.0
+    # pad-to-bucket: 3 pending -> bucket 4, pad slots repeat user id 0
+    q.submit(5); q.submit(6); q.submit(8)
+    batch = q.next_batch(force=True)
+    assert batch.bucket == 4 and batch.user_ids == (5, 6, 8, 0)
+    assert len(batch.requests) == 3 and batch.occupancy == 0.75
+
+
+def test_queue_backpressure_and_stats():
+    q = RequestQueue(max_batch=2, max_wait_us=0, max_depth=3,
+                     clock=ManualClock())
+    for uid in range(3):
+        q.submit(uid)
+    with pytest.raises(QueueFull):
+        q.submit(99)
+    assert q.stats()["rejected"] == 1 and q.stats()["depth"] == 3
+    q.next_batch(); q.next_batch()
+    s = q.stats()
+    assert s["dispatched"] == 3 and s["batches"] == 2 and s["depth"] == 0
+    assert 0.0 < s["mean_occupancy"] <= 1.0
+    with pytest.raises(ValueError, match="max_depth"):
+        RequestQueue(max_batch=8, max_depth=4)
+    with pytest.raises(ValueError, match="max_batch"):
+        RequestQueue(max_batch=0)
+    with pytest.raises(ValueError, match="advance"):
+        ManualClock().advance(-1)
+
+
+def test_queue_determinism_same_trace_same_batches():
+    """Batch composition is a pure function of the (trace, clock) pair:
+    replaying the same submissions at the same virtual times yields
+    identical batches."""
+    def play():
+        clock = ManualClock()
+        q = RequestQueue(max_batch=4, max_wait_us=50, clock=clock)
+        out = []
+        for step, uid in enumerate([5, 3, 9, 1, 7, 2, 8, 4, 6]):
+            q.submit(uid)
+            clock.advance(17)
+            b = q.next_batch()
+            if b is not None:
+                out.append((b.user_ids, b.bucket, b.t_dispatch_us,
+                            tuple(r.req_id for r in b.requests)))
+        while len(q):
+            clock.advance(50)
+            b = q.next_batch()
+            if b is not None:
+                out.append((b.user_ids, b.bucket, b.t_dispatch_us,
+                            tuple(r.req_id for r in b.requests)))
+        return out
+    first, second = play(), play()
+    assert first == second and len(first) > 1
+
+
+# --------------------------------------------------------------- service
+def test_service_end_to_end_matches_recommender():
+    ue, ie, indptr, items = _tables(seed=17, nu=30, ni=50)
+    rec = Recommender(ue, ie, seen_indptr=indptr, seen_items=items, k=5,
+                      user_batch=8, topology="uniform")
+    svc = RecommenderService(rec, max_batch=4, max_wait_us=200,
+                             clock=ManualClock())
+    users = [3, 11, 3, 29, 0, 7, 15, 22, 9]
+    for uid in users:
+        svc.submit(uid)
+    responses = svc.drain()
+    assert [r.user_id for r in responses] == users
+    want_ids, want_scores = rec.recommend(np.asarray(users, np.int32))
+    for row, r in enumerate(responses):
+        np.testing.assert_array_equal(r.ids, want_ids[row])
+        np.testing.assert_array_equal(r.scores, want_scores[row])
+        assert r.total_us == r.wait_us + r.service_us
+    s = svc.stats()
+    assert s["completed"] == len(users) and s["depth"] == 0
+    assert s["batches"] == 3                        # 4 + 4 + 1
+    assert s["service_p50_us"] > 0 and s["total_p99_us"] >= s["total_p50_us"]
+    assert s["cache_hit_rate"] == {}
+    assert "RecommenderService[" in svc.describe()
+    # virtual time advanced by the measured batch compute
+    assert svc.clock.now_us() > 0
+
+
+def test_service_backpressure_reexport():
+    ue, ie, *_ = _tables()
+    svc = RecommenderService(Recommender(ue, ie, k=3, topology="uniform"),
+                             max_batch=1, max_depth=1, max_wait_us=0,
+                             clock=ManualClock())
+    svc.submit(0)
+    with pytest.raises(QueueFull):
+        svc.submit(1)
+    assert len(svc.poll(force=True)) == 1
+
+
 # ----------------------------------------------------------------- ServeCfg
 def test_serve_cfg_round_trip_and_validation():
     spec = ExperimentSpec(serve=ServeCfg(cache_rows=128, fused=True))
@@ -278,6 +522,25 @@ def test_serve_cfg_round_trip_and_validation():
         ServeCfg(cache_rows=-5)
     with pytest.raises(ValueError, match="unknown"):
         ExperimentSpec.from_dict({"serve": {"bogus": 1}})
+
+
+def test_serve_cfg_ann_and_queue_fields_round_trip_and_validation():
+    spec = ExperimentSpec(serve=ServeCfg(ann=True, keep_frac=0.25,
+                                         queue_max_batch=16,
+                                         queue_max_wait_us=500))
+    again = ExperimentSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.serve.ann is True and again.serve.keep_frac == 0.25
+    assert again.serve.queue_max_batch == 16
+    assert again.serve.queue_max_wait_us == 500
+    assert spec.override({"serve.keep_frac": 1.0, "serve.ann": False,
+                          "serve.queue_max_batch": 64,
+                          "serve.queue_max_wait_us": 1000}).serve == \
+        ServeCfg()
+    for bad in ({"keep_frac": 0.0}, {"keep_frac": 1.5},
+                {"queue_max_batch": 0}, {"queue_max_wait_us": -1}):
+        with pytest.raises(ValueError):
+            ServeCfg(**bad)
 
 
 # --------------------------------------------------------- BENCH artifacts
@@ -302,11 +565,26 @@ def test_serving_bench_artifact_is_committed_and_shows_wins():
     import os
     path = os.path.join(bench_common.REPO_ROOT, "BENCH_serving.json")
     with open(path) as f:
-        data = json.load(f)["power_law_stream"]
-    assert data["fused_speedup_p50"] > 1.0
-    assert data["fused_cached_vs_unfused_p50"] > 1.0
-    assert 0.0 < data["fused_cached"]["hit_rate"] <= 1.0
-    assert data["cache_bytes_saved_frac"] > 0.0
+        data = json.load(f)
+    stream = data["power_law_stream"]
+    assert stream["fused_speedup_p50"] > 1.0
+    assert stream["fused_cached_vs_unfused_p50"] > 1.0
+    assert 0.0 < stream["fused_cached"]["hit_rate"] <= 1.0
+    assert stream["cache_bytes_saved_frac"] > 0.0
+    # the steady-state arm is prefilled; the cold transient is reported
+    # in its own arm instead of polluting the steady p99
+    assert stream["fused_cached_cold"]["hit_rate"] <= \
+        stream["fused_cached"]["hit_rate"]
+    ann = data["ann_retrieval"]
+    assert ann["n_items"] >= 65536
+    assert ann["recall_at_10"] >= 0.95
+    assert ann["speedup_p50"] >= 3.0
+    assert ann["keep_all_bitwise"] is True
+    load = data["load"]
+    assert load["coalescing_wins"] is True
+    assert load["coalescing_throughput_gain"] > 1.0
+    assert load["open_loop"]["coalesced"]["total_p99_us"] <= \
+        load["open_loop"]["per_request"]["total_p99_us"]
 
 
 def test_cache_stats_dataclass():
